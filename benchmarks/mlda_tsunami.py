@@ -1,0 +1,139 @@
+"""Paper §4.3 / Figs. 8-10: MLDA tsunami source inversion.
+
+3-level hierarchy, exactly the paper's construction:
+  level 0: GP emulator (Matérn-5/2 ARD, type-II MLE) trained on
+           low-discrepancy (Sobol') samples of the smoothed model,
+  level 1: smoothed-bathymetry SWE at coarse resolution,
+  level 2: fully-resolved SWE,
+with subsampling rates (25, 2), Gaussian random-walk proposals pre-tuned on
+the GP posterior, N independent chains x 7 fine samples each (paper: 100
+chains, 2800 cores, speedup 96.38).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps.tsunami import TsunamiModel, make_logposts
+from repro.core.hierarchy import MultilevelModel
+from repro.uq.gp import GP
+from repro.uq.mcmc import gelman_rubin, run_chains
+from repro.uq.mlda import mlda
+from repro.uq.qmc import sobol
+
+TRUE_THETA = np.array([90.0, 2.5])
+PRIOR = ((30.0, 150.0), (0.5, 4.0))  # x0 [km], amplitude [m]
+NOISE_SD = np.array([0.5, 0.05, 0.5, 0.05])  # arrival [min], height [m]
+
+
+def build_hierarchy(n_gp_train: int = 128, seed: int = 3):
+    model = TsunamiModel()
+    # synthetic observations from the FINE model + noise
+    rng = np.random.default_rng(seed)
+    data = np.asarray(model([list(TRUE_THETA)], {"level": 1})[0])
+    data = data + rng.standard_normal(4) * NOISE_SD * 0.5
+
+    # GP emulator on low-discrepancy samples of the SMOOTHED model
+    u = sobol(n_gp_train, 2, scramble_seed=seed)
+    X = np.stack(
+        [PRIOR[0][0] + u[:, 0] * (PRIOR[0][1] - PRIOR[0][0]),
+         PRIOR[1][0] + u[:, 1] * (PRIOR[1][1] - PRIOR[1][0])], axis=1
+    )
+    t0 = time.monotonic()
+    Y = np.array([model([list(x)], {"level": 0})[0] for x in X])
+    t_train_evals = time.monotonic() - t0
+    gps = [GP.fit(X, Y[:, j], n_iters=250) for j in range(4)]
+    t_gp = time.monotonic() - t0 - t_train_evals
+
+    def gp_logpost(theta):
+        x0, A = float(theta[0]), float(theta[1])
+        if not (PRIOR[0][0] <= x0 <= PRIOR[0][1] and PRIOR[1][0] <= A <= PRIOR[1][1]):
+            return -np.inf
+        obs = np.array([float(g.predict(np.array([[x0, A]]))[0]) for g in gps])
+        return float(-0.5 * np.sum(((obs - data) / NOISE_SD) ** 2))
+
+    make = make_logposts(model, data, NOISE_SD, PRIOR)
+    print(f"GP training: {n_gp_train} smoothed-model evals in {t_train_evals:.1f}s, "
+          f"4 GP fits in {t_gp:.1f}s")
+    return model, [gp_logpost, make(0), make(1)], data
+
+
+def run(
+    n_chains: int = 8,
+    n_fine_samples: int = 7,
+    subsampling=(25, 2),
+    n_gp_train: int = 128,
+    cluster_latency_s: float = 0.0,
+):
+    model, logposts, data = build_hierarchy(n_gp_train)
+    prop_cov = np.diag([8.0**2, 0.25**2])  # pre-tuned to the GP posterior scale
+
+    if cluster_latency_s:
+        # emulate the paper's deployment: GP runs on the workstation, PDE
+        # levels are dispatched to a remote cluster (latency-dominated from
+        # the UQ process's perspective; chains then parallelize)
+        def wrap(lp):
+            def f(theta):
+                time.sleep(cluster_latency_s)
+                return lp(theta)
+
+            return f
+
+        logposts = [logposts[0], wrap(logposts[1]), wrap(logposts[2])]
+
+    t0 = time.monotonic()
+
+    def chain(i):
+        rng = np.random.default_rng(100 + i)
+        x0 = np.array([
+            np.random.default_rng(i).uniform(*PRIOR[0]),
+            np.random.default_rng(i + 50).uniform(*PRIOR[1]),
+        ])
+        return mlda(logposts, x0, n_fine_samples, list(subsampling), prop_cov, rng)
+
+    results = run_chains(chain, n_chains, parallel=True)
+    wall = time.monotonic() - t0
+
+    samples = np.concatenate([r.samples for r in results], axis=0)
+    evals = np.sum([r.evals_per_level for r in results], axis=0)
+    # sequential-equivalent time from per-level eval counts x measured costs
+    t_coarse = _timed(lambda: model([list(TRUE_THETA)], {"level": 0})) + cluster_latency_s
+    t_fine = _timed(lambda: model([list(TRUE_THETA)], {"level": 1})) + cluster_latency_s
+    seq_equiv = evals[1] * t_coarse + evals[2] * t_fine
+    speedup = seq_equiv / wall
+    post_mean = samples.mean(0)
+    chains_x = np.stack([r.samples[:, 0] for r in results])
+    rhat = gelman_rubin(chains_x)
+    print(f"chains={n_chains} fine samples/chain={n_fine_samples} wall={wall:.1f}s")
+    print(f"evals per level (GP, smoothed, fine): {evals.tolist()} "
+          f"(paper: GP free, 1400 smoothed, 800 fine)")
+    print(f"posterior mean theta=({post_mean[0]:.1f} km, {post_mean[1]:.2f} m) "
+          f"true=({TRUE_THETA[0]}, {TRUE_THETA[1]}); R-hat(x0)={rhat:.2f}")
+    print(f"parallel speedup vs sequential-equivalent: {speedup:.1f} "
+          f"(paper: 96.38 on 100 chains)")
+    return {
+        "wall_s": wall,
+        "evals_per_level": evals.tolist(),
+        "posterior_mean": post_mean.tolist(),
+        "speedup": float(speedup),
+        "rhat_x0": float(rhat),
+    }
+
+
+def _timed(f):
+    t0 = time.monotonic()
+    f()
+    return time.monotonic() - t0
+
+
+def main(quick: bool = False):
+    if quick:
+        return run(n_chains=4, n_fine_samples=3, subsampling=(5, 2), n_gp_train=32,
+                   cluster_latency_s=0.1)
+    return run(n_chains=16, n_fine_samples=7, subsampling=(25, 2), n_gp_train=128,
+               cluster_latency_s=0.25)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and reports, per (arch x shape x mesh):
+  compute_s   = HLO_FLOPs / (peak bf16 FLOP/s)          [per device]
+  memory_s    = HLO bytes accessed / HBM bandwidth       [per device]
+  collective_s= ring-model link bytes / ICI link bandwidth [per device]
+  dominant term, MODEL_FLOPS/HLO_FLOPs (useful-compute fraction), and the
+  roofline fraction = useful-compute time / dominant-term time.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.types import V5E
+
+DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(directory: Path | None = None) -> list[dict]:
+    d = directory or DRYRUN_DIR
+    cells = []
+    for f in sorted(d.glob("*.json")):
+        data = json.loads(f.read_text())
+        t = data["roofline_terms_s"]
+        useful_s = data["model_flops_per_device"] / V5E.peak_flops_bf16
+        bound = max(t.values())
+        data["useful_s"] = useful_s
+        data["bound_s"] = bound
+        if data.get("kind") == "decode" and data.get("memory_ideal_s"):
+            # single-token decode is memory-bound by physics: measure against
+            # the must-move-bytes floor (params + cache r/w per step)
+            data["roofline_fraction"] = data["memory_ideal_s"] / t["memory_s"]
+        else:
+            data["roofline_fraction"] = useful_s / bound if bound else 0.0
+        cells.append(data)
+    return cells
+
+
+def format_table(cells: list[dict], mesh: str | None = None) -> str:
+    rows = [c for c in cells if mesh is None or c["mesh"].count("x") == (2 if mesh == "multi" else 1)]
+    hdr = (
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "dominant | useful/HLO | roofline_frac |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for c in sorted(rows, key=lambda c: (c["arch"], c["shape"], c["mesh"])):
+        t = c["roofline_terms_s"]
+        uf = c.get("useful_flops_fraction") or 0.0
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} | {t['collective_s']:.3e} "
+            f"| {c['dominant'].replace('_s','')} | {uf:.2f} | {c['roofline_fraction']:.3f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main(quick: bool = False):
+    cells = load_cells()
+    if not cells:
+        print("no dry-run artifacts found; run: python -m repro.launch.dryrun")
+        return []
+    print(format_table(cells, mesh="single"))
+    worst = sorted(cells, key=lambda c: c["roofline_fraction"])[:3]
+    coll = sorted(cells, key=lambda c: -c["roofline_terms_s"]["collective_s"])[:3]
+    print("\nworst roofline fractions:",
+          [(c["arch"], c["shape"], c["mesh"], round(c["roofline_fraction"], 4)) for c in worst])
+    print("most collective-bound:",
+          [(c["arch"], c["shape"], c["mesh"]) for c in coll])
+    return cells
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Prints a ``name,us_per_call,derived`` CSV line per benchmark (quick mode by
+default so the suite completes in a few minutes on one CPU core; --full runs
+the paper-scale protocols).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+
+def _csv(name: str, us_per_call: float, derived: str):
+    print(f"CSV,{name},{us_per_call:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+    results = {}
+
+    benches = []
+    from benchmarks import mlda_tsunami, qmc_defects, roofline, sparse_grid_l2sea, weak_scaling
+
+    benches = [
+        ("weak_scaling_fig5", weak_scaling.main),
+        ("sparse_grid_l2sea_sec4.1", sparse_grid_l2sea.main),
+        ("qmc_defects_sec4.2", qmc_defects.main),
+        ("mlda_tsunami_sec4.3", mlda_tsunami.main),
+        ("roofline", roofline.main),
+    ]
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====")
+        t0 = time.monotonic()
+        try:
+            out = fn(quick=quick)
+            dt = time.monotonic() - t0
+            derived = ""
+            if name.startswith("weak_scaling") and out:
+                derived = f"min_efficiency={min(r['efficiency'] for r in out):.3f}"
+            elif name.startswith("sparse_grid") and out:
+                derived = f"speedup={out['speedup']:.1f};evals={out['total_evals']}"
+            elif name.startswith("qmc") and out:
+                derived = f"online_speedup={out['online_speedup']:.1f};relerr={out['rom_max_relerr']:.1e}"
+            elif name.startswith("mlda") and out:
+                derived = f"speedup={out['speedup']:.1f};evals={out['evals_per_level']}"
+            elif name == "roofline" and out:
+                fracs = [c["roofline_fraction"] for c in out]
+                derived = f"cells={len(out)};median_frac={sorted(fracs)[len(fracs)//2]:.3f}"
+            results[name] = out
+            _csv(name, dt * 1e6, derived)
+        except Exception as e:  # noqa: BLE001
+            _csv(name, -1, f"FAILED:{e!r}")
+            raise
+
+    out_file = Path("experiments") / "bench_results.json"
+    out_file.parent.mkdir(exist_ok=True)
+
+    def _default(o):
+        try:
+            return float(o)
+        except Exception:  # noqa: BLE001
+            return str(o)
+
+    out_file.write_text(json.dumps(results, indent=1, default=_default))
+    print(f"\nresults -> {out_file}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 5: weak scalability of the load-balanced pool.
+
+Protocol (scaled to this container): model instances with a fixed synthetic
+evaluation cost; the number of requested evaluations grows with the number
+of instances (4 evals per instance); report wall time and parallel
+efficiency per instance count. The paper's L2-Sea instances cost ~2.5 s; we
+scale the cost down so the sweep finishes on one host (the pool overhead
+being measured is the same queueing/dispatch code path).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.interface import Model
+from repro.core.pool import ThreadedPool
+
+
+class _FixedCostModel(Model):
+    """Pure-latency model instance: isolates pool/queue overhead exactly as
+    the paper's synthetic test isolates network/LB overhead (the model-side
+    cost is held constant by always evaluating the same parameter)."""
+
+    def __init__(self, cost_s: float):
+        super().__init__("forward")
+        self.cost_s = cost_s
+
+    def get_input_sizes(self, c=None):
+        return [16]
+
+    def get_output_sizes(self, c=None):
+        return [1]
+
+    def supports_evaluate(self):
+        return True
+
+    def __call__(self, p, c=None):
+        time.sleep(self.cost_s)
+        return [[42.0]]
+
+
+def run(eval_cost_s: float = 0.1, counts=(1, 2, 4, 8, 16, 32, 64), evals_per_instance: int = 4):
+    rows = []
+    for n in counts:
+        instances = [_FixedCostModel(eval_cost_s) for _ in range(n)]
+        pool = ThreadedPool(instances)
+        theta = [0.33, -6.16] + [0.0] * 14
+        n_evals = n * evals_per_instance
+        t0 = time.monotonic()
+        pool.evaluate([theta] * n_evals)
+        wall = time.monotonic() - t0
+        pool.shutdown()
+        ideal = eval_cost_s * evals_per_instance
+        rows.append(
+            {
+                "instances": n,
+                "evaluations": n_evals,
+                "wall_s": round(wall, 3),
+                "ideal_s": round(ideal, 3),
+                "efficiency": round(ideal / wall, 3),
+            }
+        )
+        print(f"instances={n:3d} evals={n_evals:3d} wall={wall:6.3f}s "
+              f"ideal={ideal:.3f}s efficiency={ideal / wall:.3f}")
+    return rows
+
+
+def main(quick: bool = False):
+    counts = (1, 2, 4, 8, 16) if quick else (1, 2, 4, 8, 16, 32, 64)
+    return run(eval_cost_s=0.05 if quick else 0.1, counts=counts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Paper §4.3: tsunami source inversion with 3-level MLDA
+(GP emulator <- smoothed SWE <- fully-resolved SWE).
+
+Run: PYTHONPATH=src python examples/mlda_inversion.py
+"""
+import numpy as np
+
+from benchmarks.mlda_tsunami import PRIOR, TRUE_THETA, build_hierarchy
+from repro.uq.mcmc import run_chains
+from repro.uq.mlda import mlda
+
+
+def main():
+    model, logposts, data = build_hierarchy(n_gp_train=64)
+    print("observed data (arrival_1, height_1, arrival_2, height_2):", np.round(data, 3))
+
+    prop_cov = np.diag([8.0**2, 0.25**2])
+
+    def chain(i):
+        rng = np.random.default_rng(100 + i)
+        x0 = np.array([rng.uniform(*PRIOR[0]), rng.uniform(*PRIOR[1])])
+        return mlda(logposts, x0, 5, [10, 2], prop_cov, rng)
+
+    results = run_chains(chain, n_chains=4)
+    samples = np.concatenate([r.samples for r in results])
+    evals = np.sum([r.evals_per_level for r in results], axis=0)
+    print(f"posterior mean: x0={samples[:,0].mean():.1f} km (true {TRUE_THETA[0]}), "
+          f"A={samples[:,1].mean():.2f} m (true {TRUE_THETA[1]})")
+    print(f"model evaluations per level (GP, smoothed, fine): {evals.tolist()}")
+    print("the GP absorbs the sampling burden; the fine solver runs",
+          f"only {evals[2]} times — the paper's multilevel economics")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart — the paper's §2.4 minimal client/server example, in this
+framework.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.client import HTTPModel, supported_models
+from repro.core.interface import JAXModel, Model
+from repro.core.pool import ModelPool
+from repro.core.server import serve_models
+
+
+# --- a model server (paper §2.4.2: multiply the single input by two) -------
+class TestModel(Model):
+    def __init__(self):
+        super().__init__("forward")
+
+    def get_input_sizes(self, config=None):
+        return [1]
+
+    def get_output_sizes(self, config=None):
+        return [1]
+
+    def supports_evaluate(self):
+        return True
+
+    def __call__(self, parameters, config=None):
+        return [[parameters[0][0] * 2]]
+
+
+def main():
+    # 1) serve it over the UM-Bridge HTTP protocol (paper §2.4.2)
+    server, _ = serve_models([TestModel()], 4242, background=True)
+
+    # 2) call it like the paper's §2.4.1 client
+    url = "http://localhost:4242"
+    print("models:", supported_models(url))
+    model = HTTPModel(url, "forward")
+    print("F([10]) =", model([[10.0]]))
+
+    # 3) the JAX-native path: ONE pure function gives the whole UM-Bridge
+    #    surface (evaluate/gradient/Jacobian/Hessian) via AD...
+    jm = JAXModel(lambda th: jnp.array([th[0] ** 3 + th[1]]), 2, 1)
+    print("F(2,1)    =", jm([[2.0, 1.0]]))
+    print("grad      =", jm.gradient(0, 0, [[2.0, 1.0]], [1.0]))
+    print("J [1,0]^T =", jm.apply_jacobian(0, 0, [[2.0, 1.0]], [1.0, 0.0]))
+    print("H action  =", jm.apply_hessian(0, 0, 0, [[2.0, 1.0]], [1.0], [1.0, 0.0]))
+
+    # 4) ...and scales out through the SPMD pool (the paper's k8s cluster)
+    pool = ModelPool(jm)
+    thetas = np.random.default_rng(0).standard_normal((10, 2))
+    print("pool(10 points) ->", pool.evaluate(thetas).ravel().round(2))
+
+    server.shutdown()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""LM-as-UQ-model bridge: any assigned architecture as an UM-Bridge model.
+
+This is the framework's integration point (DESIGN.md §4): the expensive
+"numerical model" behind the UM-Bridge interface is an LM forward pass on the
+mesh. theta parameterizes a model perturbation:
+
+    theta = (embedding_scale, logit_temperature)
+    F(theta) = mean eval NLL on a fixed batch under the perturbed model
+
+F is smooth in theta, so the full UM-Bridge surface (Evaluate / Gradient /
+Jacobian / Hessian actions) is available via AD — e.g. a sparse-grid surrogate
+of the NLL response, or MCMC over temperature calibration, can drive a pod
+running a 104B model exactly like the paper's Matlab client drives L2-Sea.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.interface import JAXModel
+from repro.distributed.sharding import ShardingCtx, make_test_mesh
+from repro.models import model as M
+from repro.models import transformer
+
+
+class LMUQModel(JAXModel):
+    def __init__(
+        self,
+        arch: str,
+        reduced: bool = True,
+        batch: int = 2,
+        seq: int = 64,
+        ctx: ShardingCtx | None = None,
+        seed: int = 0,
+    ):
+        cfg = get_config(arch, reduced=reduced)
+        self.cfg = cfg
+        self.ctx = ctx or ShardingCtx(make_test_mesh(1, 1))
+        self.params = M.init_params(cfg, jax.random.key(seed))
+        self.batch = M.make_synth_batch(cfg, batch, seq, jax.random.key(seed + 1))
+
+        def nll(theta):
+            emb_scale = theta[0]
+            temp = theta[1]
+            params = dict(self.params)
+            embed = dict(params["embed"])
+            embed["embedding"] = embed["embedding"] * emb_scale.astype(
+                embed["embedding"].dtype
+            )
+            params["embed"] = embed
+            logits, _, _ = transformer.forward(
+                cfg, self.ctx, params, self.batch["tokens"],
+                ctx_embed=self.batch.get("ctx_embed"), mode="train",
+            )
+            logits = M.mask_padded_logits(cfg, logits.astype(jnp.float32)) / temp
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            tgt = jnp.take_along_axis(
+                logits, self.batch["targets"][..., None], axis=-1
+            )[..., 0]
+            return jnp.mean(logz - tgt)[None]
+
+        super().__init__(nll, n_inputs=2, n_outputs=1, name=f"lm-{arch}")
+
+    def __call__(self, parameters, config=None):
+        with self.ctx.mesh:
+            return super().__call__(parameters, config)

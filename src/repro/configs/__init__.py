@@ -1,0 +1,58 @@
+"""Architecture config registry: `get_config(arch_id)` / `--arch <id>`."""
+from __future__ import annotations
+
+from repro.configs import (
+    command_r_35b,
+    command_r_plus_104b,
+    deepseek_moe_16b,
+    kimi_k2_1t_a32b,
+    llama_3_2_vision_90b,
+    mamba2_1_3b,
+    minicpm3_4b,
+    musicgen_medium,
+    qwen3_0_6b,
+    zamba2_1_2b,
+)
+from repro.configs.base import reduce_config
+from repro.types import ModelConfig, SHAPES, ShapeConfig
+
+REGISTRY: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        llama_3_2_vision_90b,
+        mamba2_1_3b,
+        command_r_35b,
+        qwen3_0_6b,
+        command_r_plus_104b,
+        minicpm3_4b,
+        deepseek_moe_16b,
+        kimi_k2_1t_a32b,
+        zamba2_1_2b,
+        musicgen_medium,
+    )
+}
+
+ARCH_IDS = list(REGISTRY)
+
+
+def get_config(name: str, reduced: bool = False) -> ModelConfig:
+    cfg = REGISTRY[name]
+    return reduce_config(cfg) if reduced else cfg
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells(include_skipped: bool = False):
+    """All assigned (arch x shape) dry-run cells. long_500k is skipped for
+    pure full-attention archs (needs sub-quadratic attention; see DESIGN.md
+    §Arch-applicability)."""
+    out = []
+    for arch, cfg in REGISTRY.items():
+        for shape_name, shape in SHAPES.items():
+            skip = shape_name == "long_500k" and not cfg.sub_quadratic
+            if skip and not include_skipped:
+                continue
+            out.append((arch, shape_name, skip))
+    return out

@@ -1,0 +1,4 @@
+from repro.core.interface import JAXModel, Model, as_jax_callable  # noqa: F401
+from repro.core.pool import ModelPool, ThreadedPool  # noqa: F401
+from repro.core.scheduler import BatchingExecutor  # noqa: F401
+from repro.core.hierarchy import MultilevelModel  # noqa: F401

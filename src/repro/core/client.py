@@ -1,0 +1,90 @@
+"""UM-Bridge HTTP client (stdlib urllib — paper §2.4.1).
+
+    model = HTTPModel("http://localhost:4242", "forward")
+    print(model([[0.0, 10.0]]))
+"""
+from __future__ import annotations
+
+import json
+import urllib.request
+
+from repro.core.interface import Model
+from repro.core.protocol import ModelSupport
+
+
+def _post(url: str, path: str, body: dict, timeout: float = 60.0) -> dict:
+    req = urllib.request.Request(
+        url.rstrip("/") + path,
+        data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"},
+        method="POST",
+    )
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as resp:
+            out = json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        out = json.loads(e.read() or b"{}")
+    if "error" in out:
+        raise RuntimeError(f"{out['error'].get('type')}: {out['error'].get('message')}")
+    return out
+
+
+def supported_models(url: str) -> list[str]:
+    with urllib.request.urlopen(url.rstrip("/") + "/Info", timeout=10.0) as resp:
+        return json.loads(resp.read())["models"]
+
+
+class HTTPModel(Model):
+    def __init__(self, url: str, name: str = "forward", timeout: float = 600.0):
+        super().__init__(name)
+        self.url = url
+        self.timeout = timeout
+        info = _post(url, "/ModelInfo", {"name": name}, timeout=10.0)
+        self._support = ModelSupport.from_json(info.get("support", {}))
+
+    def get_input_sizes(self, config=None):
+        return _post(self.url, "/InputSizes", {"name": self.name, "config": config or {}})["inputSizes"]
+
+    def get_output_sizes(self, config=None):
+        return _post(self.url, "/OutputSizes", {"name": self.name, "config": config or {}})["outputSizes"]
+
+    def supports_evaluate(self):
+        return self._support.evaluate
+
+    def supports_gradient(self):
+        return self._support.gradient
+
+    def supports_apply_jacobian(self):
+        return self._support.apply_jacobian
+
+    def supports_apply_hessian(self):
+        return self._support.apply_hessian
+
+    def __call__(self, parameters, config=None):
+        body = {"name": self.name, "input": [list(map(float, p)) for p in parameters], "config": config or {}}
+        return _post(self.url, "/Evaluate", body, self.timeout)["output"]
+
+    def gradient(self, out_wrt, in_wrt, parameters, sens, config=None):
+        body = {
+            "name": self.name, "outWrt": out_wrt, "inWrt": in_wrt,
+            "input": [list(map(float, p)) for p in parameters],
+            "sens": list(map(float, sens)), "config": config or {},
+        }
+        return _post(self.url, "/Gradient", body, self.timeout)["output"]
+
+    def apply_jacobian(self, out_wrt, in_wrt, parameters, vec, config=None):
+        body = {
+            "name": self.name, "outWrt": out_wrt, "inWrt": in_wrt,
+            "input": [list(map(float, p)) for p in parameters],
+            "vec": list(map(float, vec)), "config": config or {},
+        }
+        return _post(self.url, "/ApplyJacobian", body, self.timeout)["output"]
+
+    def apply_hessian(self, out_wrt, in_wrt1, in_wrt2, parameters, sens, vec, config=None):
+        body = {
+            "name": self.name, "outWrt": out_wrt, "inWrt1": in_wrt1, "inWrt2": in_wrt2,
+            "input": [list(map(float, p)) for p in parameters],
+            "sens": list(map(float, sens)), "vec": list(map(float, vec)),
+            "config": config or {},
+        }
+        return _post(self.url, "/ApplyHessian", body, self.timeout)["output"]

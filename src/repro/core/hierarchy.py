@@ -1,0 +1,52 @@
+"""Multilevel model hierarchies (paper §2.1, §4.3).
+
+MLDA/MLMC-style methods operate on a stack of models of increasing fidelity
+and cost. Each level is an UM-Bridge `Model` (or a plain callable); the
+hierarchy tracks per-level evaluation counts and wall time so benchmarks can
+report the paper's cost split (e.g. §4.3: 1400 smoothed / 800 fine solves).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.interface import Model, as_jax_callable
+
+
+class MultilevelModel:
+    def __init__(self, levels: Sequence, configs: Sequence[dict] | None = None):
+        """levels[0] = coarsest ... levels[-1] = finest. Each level is a
+        Model or a callable theta -> np.ndarray."""
+        self.levels = list(levels)
+        self.configs = list(configs) if configs else [None] * len(levels)
+        self.counts = [0] * len(levels)
+        self.time_s = [0.0] * len(levels)
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.levels)
+
+    def _call_level(self, level: int, theta) -> np.ndarray:
+        m = self.levels[level]
+        if isinstance(m, Model):
+            out = m([list(np.asarray(theta, float).ravel())], self.configs[level])
+            return np.asarray(out[0])
+        return np.asarray(m(np.asarray(theta)))
+
+    def evaluate(self, level: int, theta) -> np.ndarray:
+        t0 = time.monotonic()
+        out = self._call_level(level, theta)
+        self.time_s[level] += time.monotonic() - t0
+        self.counts[level] += 1
+        return out
+
+    def __call__(self, level: int, theta) -> np.ndarray:
+        return self.evaluate(level, theta)
+
+    def report(self) -> dict:
+        return {
+            "counts": list(self.counts),
+            "time_s": [round(t, 3) for t in self.time_s],
+        }

@@ -1,0 +1,192 @@
+"""The UM-Bridge model interface (paper §2.1-§2.2), JAX-native.
+
+A model is a map F: R^n -> R^m exposing
+    Evaluate        F(theta)
+    Gradient        sens^T J_F(theta)      (VJP)
+    ApplyJacobian   J_F(theta) vec         (JVP)
+    ApplyHessian    d/de [J_F(theta + e vec)^T sens]   (HVP)
+with capability flags. UQ methods are written against this interface only.
+
+`JAXModel` lowers the entry bar further than the paper: the model expert
+writes ONE pure function, and evaluate/gradient/Jacobian/Hessian actions are
+all derived via jax AD — in the paper each operation must be hand-implemented
+by the model server author.
+
+The list-of-lists parameter layout mirrors the UM-Bridge HTTP protocol: a
+model may take several input vectors (blocks); most UQ methods use one block.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Model:
+    """Abstract UM-Bridge model (mirror of umbridge.Model)."""
+
+    def __init__(self, name: str = "forward"):
+        self.name = name
+
+    # -- metadata -----------------------------------------------------------
+    def get_input_sizes(self, config: dict | None = None) -> list[int]:
+        raise NotImplementedError
+
+    def get_output_sizes(self, config: dict | None = None) -> list[int]:
+        raise NotImplementedError
+
+    # -- capability flags ---------------------------------------------------
+    def supports_evaluate(self) -> bool:
+        return False
+
+    def supports_gradient(self) -> bool:
+        return False
+
+    def supports_apply_jacobian(self) -> bool:
+        return False
+
+    def supports_apply_hessian(self) -> bool:
+        return False
+
+    # -- operations ---------------------------------------------------------
+    def __call__(self, parameters: list[list[float]], config: dict | None = None):
+        raise NotImplementedError
+
+    def gradient(self, out_wrt: int, in_wrt: int, parameters, sens, config=None):
+        raise NotImplementedError
+
+    def apply_jacobian(self, out_wrt: int, in_wrt: int, parameters, vec, config=None):
+        raise NotImplementedError
+
+    def apply_hessian(self, out_wrt, in_wrt1, in_wrt2, parameters, sens, vec, config=None):
+        raise NotImplementedError
+
+
+class JAXModel(Model):
+    """Wrap a pure JAX function f(theta [n]) -> out [m] as an UM-Bridge model.
+
+    All four operations derive from `f` by AD; everything is jitted and
+    cached. `config_keys` lists config entries that select different jitted
+    specializations (static args), mirroring UM-Bridge config dicts.
+    """
+
+    def __init__(
+        self,
+        fn: Callable,
+        n_inputs: int,
+        n_outputs: int,
+        name: str = "forward",
+        config_keys: Sequence[str] = (),
+        defaults: dict | None = None,
+    ):
+        super().__init__(name)
+        self._fn = fn
+        self._n = int(n_inputs)
+        self._m = int(n_outputs)
+        self._config_keys = tuple(config_keys)
+        self._defaults = dict(defaults or {})
+        self._jit_cache: dict = {}
+
+    # -- metadata -----------------------------------------------------------
+    def get_input_sizes(self, config=None) -> list[int]:
+        return [self._n]
+
+    def get_output_sizes(self, config=None) -> list[int]:
+        return [self._m]
+
+    def supports_evaluate(self) -> bool:
+        return True
+
+    def supports_gradient(self) -> bool:
+        return True
+
+    def supports_apply_jacobian(self) -> bool:
+        return True
+
+    def supports_apply_hessian(self) -> bool:
+        return True
+
+    # -- machinery ----------------------------------------------------------
+    def _ckey(self, config: dict | None):
+        config = {**self._defaults, **(config or {})}
+        return tuple((k, config.get(k)) for k in self._config_keys)
+
+    def _cfg_fn(self, config: dict | None) -> Callable:
+        merged = {**self._defaults, **(config or {})}
+        if self._config_keys:
+            return lambda th: self._fn(th, **{k: merged.get(k) for k in self._config_keys})
+        return self._fn
+
+    def _get(self, kind: str, config: dict | None) -> Callable:
+        key = (kind, self._ckey(config))
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        f = self._cfg_fn(config)
+        if kind == "eval":
+            g = jax.jit(f)
+        elif kind == "eval_batch":
+            g = jax.jit(jax.vmap(f))
+        elif kind == "grad":  # sens^T J
+            def g(theta, sens):
+                _, vjp = jax.vjp(f, theta)
+                return vjp(sens)[0]
+            g = jax.jit(g)
+        elif kind == "jvp":  # J vec
+            def g(theta, vec):
+                return jax.jvp(f, (theta,), (vec,))[1]
+            g = jax.jit(g)
+        elif kind == "hvp":  # d/de [J(theta+e vec)^T sens]
+            def g(theta, sens, vec):
+                def vjp_fn(th):
+                    return jax.vjp(f, th)[1](sens)[0]
+                return jax.jvp(vjp_fn, (theta,), (vec,))[1]
+            g = jax.jit(g)
+        else:
+            raise ValueError(kind)
+        self._jit_cache[key] = g
+        return g
+
+    # -- operations ---------------------------------------------------------
+    def __call__(self, parameters, config=None):
+        theta = jnp.asarray(parameters[0], jnp.float64 if jax.config.x64_enabled else jnp.float32)
+        out = self._get("eval", config)(theta)
+        return [np.asarray(out).ravel().tolist()]
+
+    def evaluate_batch(self, thetas: np.ndarray, config=None) -> np.ndarray:
+        """[N, n] -> [N, m]; the vectorized fast path used by ModelPool."""
+        out = self._get("eval_batch", config)(jnp.asarray(thetas))
+        return np.asarray(out).reshape(len(thetas), self._m)
+
+    def gradient(self, out_wrt, in_wrt, parameters, sens, config=None):
+        theta = jnp.asarray(parameters[in_wrt])
+        out = self._get("grad", config)(theta, jnp.asarray(sens, theta.dtype))
+        return np.asarray(out).ravel().tolist()
+
+    def apply_jacobian(self, out_wrt, in_wrt, parameters, vec, config=None):
+        theta = jnp.asarray(parameters[in_wrt])
+        out = self._get("jvp", config)(theta, jnp.asarray(vec, theta.dtype))
+        return np.asarray(out).ravel().tolist()
+
+    def apply_hessian(self, out_wrt, in_wrt1, in_wrt2, parameters, sens, vec, config=None):
+        theta = jnp.asarray(parameters[in_wrt1])
+        out = self._get("hvp", config)(
+            theta, jnp.asarray(sens, theta.dtype), jnp.asarray(vec, theta.dtype)
+        )
+        return np.asarray(out).ravel().tolist()
+
+    @property
+    def raw_fn(self) -> Callable:
+        return self._fn
+
+
+def as_jax_callable(model: Model, config: dict | None = None) -> Callable:
+    """Plain theta -> output callable view of any Model (numpy in/out)."""
+
+    def f(theta):
+        out = model([np.asarray(theta).ravel().tolist()], config)
+        return np.asarray(out[0])
+
+    return f

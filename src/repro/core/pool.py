@@ -1,0 +1,209 @@
+"""Parallel model-instance pools — the paper's §3 kubernetes/HAProxy analogue.
+
+Two pools, matching the two deployment modes in the paper:
+
+* `ModelPool` — the TPU/SPMD path. N model instances = the `data` axis of a
+  device mesh; a batch of evaluation points is padded to a multiple of the
+  instance count and dispatched as ONE SPMD program (vmap over the instance
+  axis, pjit over the mesh). A model instance that is itself parallel (the
+  paper's MPI launcher+workers) occupies the `model` axis inside the same
+  program. The UQ driver is completely oblivious to the mesh — the paper's
+  separation-of-concerns invariant.
+
+* `ThreadedPool` — the host-side path with literal HAProxy semantics: a queue
+  and N worker threads, each representing one model server with AT MOST ONE
+  request in flight (paper §3.1.1). Works with any `Model`, including HTTP
+  clients, and implements deadline-based speculative re-dispatch (straggler
+  mitigation — the k8s-restart analogue) plus failure retry.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interface import JAXModel, Model
+
+
+# ---------------------------------------------------------------------------
+# SPMD pool
+# ---------------------------------------------------------------------------
+
+
+class ModelPool:
+    """Mesh-sharded batched evaluation of a JAXModel.
+
+    n_instances = product of the batch mesh axes ('pod' x 'data'); each
+    instance may internally use the 'model' axis.
+    """
+
+    def __init__(self, model: JAXModel, ctx=None, config: dict | None = None):
+        self.model = model
+        self.ctx = ctx
+        self.config = config
+        self._jit_cache: dict = {}
+        if ctx is not None:
+            self.n_instances = ctx.n_data
+        else:
+            self.n_instances = max(len(jax.devices()), 1)
+        self.stats = {"batches": 0, "evaluations": 0, "padded": 0}
+
+    def _dispatch_fn(self):
+        key = "dispatch"
+        if key in self._jit_cache:
+            return self._jit_cache[key]
+        fn = self.model._cfg_fn(self.config)
+        vfn = jax.vmap(fn)
+        if self.ctx is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            bat = self.ctx.rules["batch"]
+            sh = NamedSharding(self.ctx.mesh, P(bat))
+            jfn = jax.jit(vfn, in_shardings=sh, out_shardings=sh)
+        else:
+            jfn = jax.jit(vfn)
+        self._jit_cache[key] = jfn
+        return jfn
+
+    def evaluate(self, thetas: np.ndarray) -> np.ndarray:
+        """[N, n] -> [N, m]: pad to instance multiple, one SPMD dispatch per
+        wave. This is what the load balancer + k8s replicas do in the paper,
+        minus the HTTP."""
+        thetas = np.atleast_2d(np.asarray(thetas, np.float32))
+        N = len(thetas)
+        k = self.n_instances
+        pad = (-N) % k
+        if pad:
+            thetas = np.concatenate([thetas, np.repeat(thetas[-1:], pad, 0)], 0)
+        fn = self._dispatch_fn()
+        x = jnp.asarray(thetas)
+        if self.ctx is not None:
+            with self.ctx.mesh:
+                out = fn(x)
+        else:
+            out = fn(x)
+        out = np.asarray(out)
+        if out.ndim == 1:
+            out = out[:, None]
+        self.stats["batches"] += 1
+        self.stats["evaluations"] += N
+        self.stats["padded"] += pad
+        return out[:N]
+
+    __call__ = evaluate
+
+
+# ---------------------------------------------------------------------------
+# Threaded pool (HAProxy semantics)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class _Request:
+    theta: list
+    config: dict | None
+    future: Future
+    deadline: float | None = None
+    attempts: int = 0
+
+
+class ThreadedPool:
+    """N single-tenant model instances behind a queue.
+
+    - one in-flight request per instance (paper §3.1.1)
+    - `deadline_s`: if an evaluation exceeds the deadline, it is speculatively
+      re-dispatched to another instance; first completion wins (straggler
+      mitigation)
+    - `max_retries`: instance failures (exceptions) are retried on another
+      instance (the k8s restart analogue)
+    """
+
+    def __init__(
+        self,
+        instances: Sequence[Model] | Model,
+        n_instances: int | None = None,
+        deadline_s: float | None = None,
+        max_retries: int = 2,
+    ):
+        if isinstance(instances, Model):
+            assert n_instances, "pass n_instances when sharing one Model object"
+            instances = [instances] * n_instances
+        self.instances = list(instances)
+        self.deadline_s = deadline_s
+        self.max_retries = max_retries
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._threads = [
+            threading.Thread(target=self._worker, args=(i,), daemon=True)
+            for i in range(len(self.instances))
+        ]
+        self.stats = {"evaluations": 0, "retries": 0, "respawns": 0, "busy_s": [0.0] * len(self.instances)}
+        for t in self._threads:
+            t.start()
+
+    # -- worker loop --------------------------------------------------------
+    def _worker(self, idx: int):
+        model = self.instances[idx]
+        while not self._stop.is_set():
+            try:
+                req: _Request = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if req.future.done():  # speculative duplicate already finished
+                self._q.task_done()
+                continue
+            t0 = time.monotonic()
+            try:
+                out = model([req.theta], req.config)
+                if not req.future.done():
+                    req.future.set_result(np.asarray(out[0]))
+                self.stats["evaluations"] += 1
+            except Exception as e:  # noqa: BLE001 — instance failure
+                req.attempts += 1
+                if req.attempts <= self.max_retries:
+                    self.stats["retries"] += 1
+                    self._q.put(req)
+                elif not req.future.done():
+                    req.future.set_exception(e)
+            finally:
+                self.stats["busy_s"][idx] += time.monotonic() - t0
+                self._q.task_done()
+
+    # -- API ----------------------------------------------------------------
+    def submit(self, theta, config: dict | None = None) -> Future:
+        fut: Future = Future()
+        req = _Request(list(np.asarray(theta, float).ravel()), config, fut)
+        self._q.put(req)
+        if self.deadline_s is not None:
+            def respawn():
+                if not fut.done():
+                    self.stats["respawns"] += 1
+                    self._q.put(_Request(req.theta, req.config, fut))
+            timer = threading.Timer(self.deadline_s, respawn)
+            timer.daemon = True
+            timer.start()
+        return fut
+
+    def evaluate(self, thetas, config: dict | None = None) -> np.ndarray:
+        futs = [self.submit(t, config) for t in np.atleast_2d(np.asarray(thetas, float))]
+        return np.stack([f.result() for f in futs])
+
+    __call__ = evaluate
+
+    def shutdown(self):
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=1.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

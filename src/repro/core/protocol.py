@@ -1,0 +1,59 @@
+"""UM-Bridge HTTP/JSON protocol schema (paper §2.2-§2.4).
+
+Endpoints (protocol version 1.0):
+  GET  /Info                 -> {"protocolVersion": 1.0, "models": [names]}
+  POST /InputSizes           {"name", "config"}        -> {"inputSizes": [..]}
+  POST /OutputSizes          {"name", "config"}        -> {"outputSizes": [..]}
+  POST /ModelInfo            {"name"}                  -> {"support": {...}}
+  POST /Evaluate             {"name", "input", "config"} -> {"output": [[..]]}
+  POST /Gradient             {"name", "outWrt", "inWrt", "input", "sens", "config"}
+  POST /ApplyJacobian        {"name", "outWrt", "inWrt", "input", "vec", "config"}
+  POST /ApplyHessian         {"name", "outWrt", "inWrt1", "inWrt2", "input", "sens", "vec", "config"}
+
+Errors: {"error": {"type": ..., "message": ...}} with HTTP 400.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+PROTOCOL_VERSION = 1.0
+
+
+@dataclass
+class ModelSupport:
+    evaluate: bool = False
+    gradient: bool = False
+    apply_jacobian: bool = False
+    apply_hessian: bool = False
+
+    def to_json(self) -> dict:
+        return {
+            "Evaluate": self.evaluate,
+            "Gradient": self.gradient,
+            "ApplyJacobian": self.apply_jacobian,
+            "ApplyHessian": self.apply_hessian,
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "ModelSupport":
+        return cls(
+            evaluate=d.get("Evaluate", False),
+            gradient=d.get("Gradient", False),
+            apply_jacobian=d.get("ApplyJacobian", False),
+            apply_hessian=d.get("ApplyHessian", False),
+        )
+
+
+def error_body(kind: str, message: str) -> dict:
+    return {"error": {"type": kind, "message": message}}
+
+
+def validate_evaluate_request(body: dict, input_sizes: list[int]) -> str | None:
+    inp = body.get("input")
+    if not isinstance(inp, list) or len(inp) != len(input_sizes):
+        return f"expected {len(input_sizes)} input vectors"
+    for vec, n in zip(inp, input_sizes):
+        if len(vec) != n:
+            return f"input vector size mismatch: got {len(vec)}, want {n}"
+    return None

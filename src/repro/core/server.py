@@ -1,0 +1,104 @@
+"""UM-Bridge HTTP model server (stdlib only — paper §2.4.2).
+
+`serve_models([model], port)` mirrors umbridge.serve_models; the threaded
+variant is used by tests and by `ThreadedPool`-over-HTTP setups to emulate
+the paper's k8s pods on one host.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from repro.core.interface import Model
+from repro.core.protocol import PROTOCOL_VERSION, error_body, validate_evaluate_request
+
+
+def _make_handler(models: dict[str, Model]):
+    class Handler(BaseHTTPRequestHandler):
+        def log_message(self, *args):  # silence
+            pass
+
+        def _send(self, obj, code: int = 200):
+            data = json.dumps(obj).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+
+        def do_GET(self):  # noqa: N802
+            if self.path.rstrip("/") in ("", "/Info".rstrip("/"), "/Info"):
+                self._send({"protocolVersion": PROTOCOL_VERSION, "models": list(models)})
+            else:
+                self._send(error_body("NotFound", self.path), 404)
+
+        def do_POST(self):  # noqa: N802
+            n = int(self.headers.get("Content-Length", 0))
+            try:
+                body = json.loads(self.rfile.read(n) or b"{}")
+            except json.JSONDecodeError as e:
+                return self._send(error_body("BadRequest", str(e)), 400)
+            name = body.get("name")
+            model = models.get(name)
+            if model is None:
+                return self._send(error_body("ModelNotFound", str(name)), 400)
+            config = body.get("config") or {}
+            try:
+                if self.path == "/InputSizes":
+                    return self._send({"inputSizes": model.get_input_sizes(config)})
+                if self.path == "/OutputSizes":
+                    return self._send({"outputSizes": model.get_output_sizes(config)})
+                if self.path == "/ModelInfo":
+                    return self._send(
+                        {
+                            "support": {
+                                "Evaluate": model.supports_evaluate(),
+                                "Gradient": model.supports_gradient(),
+                                "ApplyJacobian": model.supports_apply_jacobian(),
+                                "ApplyHessian": model.supports_apply_hessian(),
+                            }
+                        }
+                    )
+                if self.path == "/Evaluate":
+                    if not model.supports_evaluate():
+                        return self._send(error_body("UnsupportedFeature", "Evaluate"), 400)
+                    err = validate_evaluate_request(body, model.get_input_sizes(config))
+                    if err:
+                        return self._send(error_body("InvalidInput", err), 400)
+                    out = model(body["input"], config)
+                    return self._send({"output": [list(map(float, v)) for v in out]})
+                if self.path == "/Gradient":
+                    out = model.gradient(
+                        body["outWrt"], body["inWrt"], body["input"], body["sens"], config
+                    )
+                    return self._send({"output": list(map(float, out))})
+                if self.path == "/ApplyJacobian":
+                    out = model.apply_jacobian(
+                        body["outWrt"], body["inWrt"], body["input"], body["vec"], config
+                    )
+                    return self._send({"output": list(map(float, out))})
+                if self.path == "/ApplyHessian":
+                    out = model.apply_hessian(
+                        body["outWrt"], body["inWrt1"], body["inWrt2"],
+                        body["input"], body["sens"], body["vec"], config,
+                    )
+                    return self._send({"output": list(map(float, out))})
+                return self._send(error_body("NotFound", self.path), 404)
+            except Exception as e:  # noqa: BLE001
+                return self._send(error_body("ModelError", repr(e)), 400)
+
+    return Handler
+
+
+def serve_models(models: list[Model], port: int = 4242, background: bool = False):
+    """Blocking by default (like umbridge.serve_models); background=True
+    returns (server, thread) for tests."""
+    by_name = {m.name: m for m in models}
+    server = ThreadingHTTPServer(("127.0.0.1", port), _make_handler(by_name))
+    if background:
+        t = threading.Thread(target=server.serve_forever, daemon=True)
+        t.start()
+        return server, t
+    server.serve_forever()
+    return server, None

@@ -1,0 +1,1 @@
+from repro.distributed.sharding import ShardingCtx, logical_to_mesh  # noqa: F401

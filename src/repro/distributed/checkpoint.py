@@ -1,0 +1,114 @@
+"""Checkpointing: atomic, sharded, elastic, with async save.
+
+Design for 1000+ nodes (single-host implementation with the same interface):
+  * each leaf is saved as .npy inside a per-step directory; the directory is
+    written under a tmp name and atomically renamed (a crash mid-save never
+    corrupts the latest checkpoint);
+  * `save_async` snapshots to host memory and writes on a background thread
+    (training continues — hides checkpoint latency, the standard trick);
+  * `restore` re-shards onto ANY mesh (elastic scaling: restore a 16x16
+    checkpoint onto 2x16x16 or a single test device — specs are re-applied,
+    not stored layouts);
+  * retention: keep_last N, never deleting a checkpoint that is mid-write.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep_last: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep_last = keep_last
+        self._save_thread: threading.Thread | None = None
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def latest_step(self) -> int | None:
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*") if p.is_dir()
+        )
+        return steps[-1] if steps else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, state: dict, blocking: bool = True):
+        """state: arbitrary pytree of jax/np arrays."""
+        leaves, treedef = _flatten(state)
+        host_leaves = [np.asarray(l) for l in leaves]  # device->host snapshot
+        if blocking:
+            self._write(step, host_leaves)
+        else:
+            self.wait()  # one async save in flight at a time
+            self._save_thread = threading.Thread(
+                target=self._write, args=(step, host_leaves), daemon=True
+            )
+            self._save_thread.start()
+
+    def save_async(self, step: int, state: dict):
+        self.save(step, state, blocking=False)
+
+    def wait(self):
+        if self._save_thread is not None and self._save_thread.is_alive():
+            self._save_thread.join()
+
+    def _write(self, step: int, host_leaves: list):
+        final = self._step_dir(step)
+        tmp = self.dir / f".tmp_step_{step:08d}_{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        for i, leaf in enumerate(host_leaves):
+            np.save(tmp / f"leaf_{i:05d}.npy", leaf)
+        (tmp / "META.json").write_text(
+            json.dumps({"step": step, "n_leaves": len(host_leaves), "t": time.time()})
+        )
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)  # atomic publish
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(
+            int(p.name.split("_")[1]) for p in self.dir.glob("step_*") if p.is_dir()
+        )
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, state_like, step: int | None = None, shardings=None):
+        """Restore into the structure of `state_like` (pytree of arrays or
+        ShapeDtypeStructs). `shardings`: optional matching pytree of
+        NamedShardings for elastic re-sharding onto the current mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        meta = json.loads((d / "META.json").read_text())
+        leaves, treedef = _flatten(state_like)
+        assert meta["n_leaves"] == len(leaves), "checkpoint/state structure mismatch"
+        sh_leaves = jax.tree.leaves(shardings) if shardings is not None else [None] * len(leaves)
+        out = []
+        for i, (ref, sh) in enumerate(zip(leaves, sh_leaves)):
+            arr = np.load(d / f"leaf_{i:05d}.npy")
+            arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
+            if sh is not None:
+                out.append(jax.device_put(arr, sh))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return jax.tree.unflatten(treedef, out), step

@@ -1,0 +1,145 @@
+"""Causal GQA flash attention as a Pallas TPU kernel.
+
+TPU adaptation (not a CUDA port): the online-softmax loop is expressed as a
+sequential grid dimension over KV blocks with fp32 VMEM scratch carrying the
+running (max, sum, accumulator) — the MXU does the [Bq, hd] x [hd, Bk] and
+[Bq, Bk] x [Bk, hd] contractions per tile, and the grid order (kv innermost)
+makes the scratch live across exactly one q-tile's KV sweep. Block shapes are
+MXU-aligned (multiples of 128 on the contraction dims; q/kv tiles default
+128x128) and sized so q/k/v tiles + scratch fit VMEM (~1.2 MB at defaults).
+
+Causality is handled at tile granularity: KV tiles strictly above the
+diagonal are skipped via @pl.when (no wasted MXU work), the diagonal tile
+applies the element mask.
+
+Grid: (batch, q_heads, n_q_blocks, n_kv_blocks) — kv innermost/sequential.
+GQA: the kv head index is derived from the q head index (q_heads // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+import numpy as np
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # [1, 1, Bq, hd]
+    k_ref,  # [1, 1, Bk, hd]
+    v_ref,  # [1, 1, Bk, hd]
+    o_ref,  # [1, 1, Bq, hd]
+    m_scr,  # [Bq, 1] fp32   running max
+    l_scr,  # [Bq, 1] fp32   running sum
+    acc_scr,  # [Bq, hd] fp32  running output accumulator
+    *,
+    scale: float,
+    block_q: int,
+    block_k: int,
+    n_kv_blocks: int,
+    causal: bool,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # tile-level causal skip: kv block strictly above the diagonal
+    q_start = qi * block_q
+    k_start = ki * block_k
+    run = (not causal) or (k_start <= q_start + block_q - 1)
+
+    @pl.when(k_start <= q_start + block_q - 1 if causal else True)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # [Bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)  # [Bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # [Bq, Bk]
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_scr[...]  # [Bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # [Bq, Bk]
+        alpha = jnp.exp(m_prev - m_new)  # [Bq, 1]
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def flash_attention_kernel(
+    q: jax.Array,  # [B, nq, Sq, hd]
+    k: jax.Array,  # [B, nkv, Sk, hd]
+    v: jax.Array,  # [B, nkv, Sk, hd]
+    *,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    B, nq, Sq, hd = q.shape
+    nkv, Sk = k.shape[1], k.shape[2]
+    group = nq // nkv
+    scale = 1.0 / np.sqrt(hd)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q_blocks = Sq // block_q
+    n_kv_blocks = Sk // block_k
+
+    grid = (B, nq, n_q_blocks, n_kv_blocks)
+
+    def q_map(b, h, qi, ki):
+        return (b, h, qi, 0)
+
+    def kv_map(b, h, qi, ki):
+        return (b, h // group, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv_blocks=n_kv_blocks,
+        causal=causal,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), q_map),
+            pl.BlockSpec((1, 1, block_k, hd), kv_map),
+            pl.BlockSpec((1, 1, block_k, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((B, nq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running sum
+            pltpu.VMEM((block_q, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,20 @@
+"""Jitted public wrapper: dispatches to the Pallas kernel on TPU, interpret
+mode on CPU (kernel body executed in Python for validation), or the jnp
+oracle."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, impl: str | None = None, **kw):
+    """q [B, nq, S, hd], k/v [B, nkv, S, hd] -> [B, nq, S, hd]."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if impl == "ref":
+        return attention_ref(q, k, v, causal=causal)
+    return flash_attention_kernel(
+        q, k, v, causal=causal, interpret=(impl == "interpret"), **kw
+    )

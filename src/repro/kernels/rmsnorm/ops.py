@@ -1,0 +1,18 @@
+"""Public wrapper for the fused RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_kernel
+
+
+def rmsnorm_fused(x, w, *, eps: float = 1e-5, impl: str | None = None):
+    """x [..., d], w [d]."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if impl == "ref":
+        return rmsnorm_ref(x, w, eps)
+    shape = x.shape
+    y = rmsnorm_kernel(x.reshape(-1, shape[-1]), w, eps=eps, interpret=(impl == "interpret"))
+    return y.reshape(shape)

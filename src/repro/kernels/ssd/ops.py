@@ -1,0 +1,40 @@
+"""Public wrapper used by repro.models.ssm (cfg.attn_impl='pallas')."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ssd import ssd_kernel
+
+
+def ssd(cfg, xh, dt, Bn, Cn, A, init_state=None, impl: str | None = None):
+    """Adapter from the model's [B,S,g,r,P] layout to the kernel's
+    [B,H,S,P] layout. Returns (y [B,S,g,r,P], state [B,g,r,N,P])."""
+    B, S, g, r, P = xh.shape
+    N = Bn.shape[-1]
+    H = g * r
+    x_k = xh.reshape(B, S, H, P).transpose(0, 2, 1, 3)
+    dt_k = dt.reshape(B, S, H).transpose(0, 2, 1)
+    B_k = Bn.transpose(0, 2, 1, 3)  # [B,g,S,N]
+    C_k = Cn.transpose(0, 2, 1, 3)
+    A_k = A.reshape(H)
+    if init_state is None:
+        s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    else:
+        s0 = init_state.reshape(B, H, N, P)
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    pad = (-S) % 128
+    chunk = min(128, S if pad == 0 else S + pad)
+    if S % chunk != 0:
+        padw = ((0, 0), (0, 0), (0, pad), (0, 0))
+        x_k = jnp.pad(x_k, padw)
+        dt_k = jnp.pad(dt_k, padw[:3])
+        B_k = jnp.pad(B_k, padw)
+        C_k = jnp.pad(C_k, padw)
+    y, s_out = ssd_kernel(
+        x_k, dt_k, B_k, C_k, A_k, s0, chunk=chunk, interpret=(impl == "interpret")
+    )
+    y = y[:, :, :S]
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, g, r, P)
+    return y, s_out.reshape(B, g, r, N, P)

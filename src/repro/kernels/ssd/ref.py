@@ -1,0 +1,34 @@
+"""Oracle for the SSD kernel: the sequential O(S) recurrence (and the
+chunked jnp implementation in repro.models.ssm, which is itself validated
+against the recurrence in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, Bm, Cm, A, init_state):
+    """x [B,H,S,P], dt [B,H,S], Bm/Cm [B,G,S,N], A [H], init [B,H,N,P]."""
+    B, H, S, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    group = H // G
+    Bh = jnp.repeat(Bm, group, axis=1)  # [B,H,S,N]
+    Ch = jnp.repeat(Cm, group, axis=1)
+
+    def step(state, inputs):
+        x_t, dt_t, B_t, C_t = inputs  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        dA = jnp.exp(dt_t * A[None, :])
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bhn,bh,bhp->bhnp", B_t, dt_t, x_t
+        )
+        y_t = jnp.einsum("bhn,bhnp->bhp", C_t, state)
+        return state, y_t
+
+    xs = (
+        jnp.moveaxis(x, 2, 0),
+        jnp.moveaxis(dt, 2, 0),
+        jnp.moveaxis(Bh, 2, 0),
+        jnp.moveaxis(Ch, 2, 0),
+    )
+    state, ys = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype), state

@@ -1,0 +1,132 @@
+"""Mamba-2 SSD chunk scan as a Pallas TPU kernel.
+
+TPU adaptation: the SSD dual form is a chain of per-chunk MXU contractions
+([Q,N]x[N,Q], [Q,Q]x[Q,P], [N,Q]x[Q,P]) with a small recurrent state [N, P]
+carried in fp32 VMEM scratch across the innermost (sequential) grid dim —
+the TPU grid is executed in order, so the scratch IS the inter-chunk
+recurrence; no separate scan pass is needed. Chunk length Q defaults to 128
+(MXU-aligned); the [Q,Q] decay matrix is built from a cumulative-sum vector
+with 2-D broadcasted iota (TPU requires >=2-D iota).
+
+Grid: (batch, heads, n_chunks) — chunks innermost. B/C are shared per head
+group (n_groups); A is a per-head scalar in SMEM-like [H,1] layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # [1, 1, Q, P]
+    dt_ref,  # [1, 1, Q]
+    b_ref,  # [1, 1, Q, N]
+    c_ref,  # [1, 1, Q, N]
+    a_ref,  # [1, 1]
+    s0_ref,  # [1, 1, N, P] initial state
+    y_ref,  # [1, 1, Q, P]
+    sout_ref,  # [1, 1, N, P] final state
+    state_scr,  # [N, P] fp32 scratch — the inter-chunk recurrence
+    *,
+    n_chunks: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)  # [Q, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)  # [Q]
+    Bm = b_ref[0, 0].astype(jnp.float32)  # [Q, N]
+    Cm = c_ref[0, 0].astype(jnp.float32)  # [Q, N]
+    A = a_ref[0, 0].astype(jnp.float32)  # scalar (negative)
+
+    Q = x.shape[0]
+    dA = dt * A  # [Q]
+    cum = jnp.cumsum(dA)  # [Q]
+    total = cum[-1]
+
+    # intra-chunk decay matrix L[i,j] = exp(cum_i - cum_j), i >= j
+    ci_idx = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    cj_idx = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.exp(cum[:, None] - cum[None, :])
+    L = jnp.where(ci_idx >= cj_idx, L, 0.0)
+
+    CB = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q]
+    scores = CB * L * dt[None, :]
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, P]
+
+    # inter-chunk contribution from the carried state
+    state = state_scr[...]  # [N, P]
+    y += jax.lax.dot_general(
+        Cm, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(cum)[:, None]
+
+    # state update: S <- S * exp(total) + B^T diag(dt * exp(total - cum)) X
+    decay_out = dt * jnp.exp(total - cum)  # [Q]
+    state_scr[...] = state * jnp.exp(total) + jax.lax.dot_general(
+        Bm * decay_out[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _final():
+        sout_ref[0, 0] = state_scr[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_kernel(
+    x: jax.Array,  # [B, H, S, P]
+    dt: jax.Array,  # [B, H, S] (post-softplus)
+    Bm: jax.Array,  # [B, G, S, N]
+    Cm: jax.Array,  # [B, G, S, N]
+    A: jax.Array,  # [H] (negative)
+    init_state: jax.Array,  # [B, H, N, P]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    B, H, S, P = x.shape
+    G, N = Bm.shape[1], Bm.shape[3]
+    group = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, f"S={S} % chunk={Q}"
+    nc = S // Q
+    A2 = A.reshape(H, 1).astype(jnp.float32)
+
+    grid = (B, H, nc)
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, Q), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, h // group, c, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, h // group, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, Bm, Cm, A2, init_state)
+    return y, s_out

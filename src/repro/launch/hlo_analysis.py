@@ -1,0 +1,369 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` visits every computation ONCE —
+a lax.scan over 60 layers reports the flops/bytes/collectives of a single
+layer (verified empirically; see EXPERIMENTS.md §Dry-run "accounting"). For
+scanned-layer models that undercounts by ~n_layers.
+
+This module parses ``compiled.as_text()`` (post-SPMD, post-optimization HLO):
+  * splits the module into computations,
+  * finds ``while`` ops and extracts their trip counts from the loop-bound
+    constant in the condition computation,
+  * propagates execution multiplicity ENTRY -> while bodies (nested loops
+    multiply),
+  * per computation, counts
+      - dot/convolution FLOPs (2 * result_elements * contraction_size),
+      - fusion-boundary bytes (result + operand bytes of real ops;
+        fusion-internal computations carry no multiplicity, so XLA's fusion
+        decisions are respected),
+      - ring-model collective link bytes per op class,
+  * returns totals with multiplicity applied.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DT_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w\.\-]+)(?:\.clone)? \(.*\) -> .+ \{\s*$")
+# result segment may be a long tuple containing layout braces and
+# /*index=N*/ comments (which contain '='), so match it lazily up to the
+# first " opcode(" occurrence
+_INSTR = re.compile(
+    r"^\s*(?:ROOT )?%?([\w\.\-]+) = (\(?[a-z0-9]+\[.*?) ([\w\-]+)\((.*)$"
+)
+_WHILE_ATTR = re.compile(r"condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+# ops that move no real data / are bookkeeping
+_SKIP_BYTES = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while", "call",
+    "conditional", "custom-call",
+}
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes_list(text: str) -> list[int]:
+    return [
+        int(_DT_BYTES.get(dt, 4)) * _dims_product(dims)
+        for dt, dims in _SHAPE_RE.findall(text)
+    ]
+
+
+def _dims_product(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+
+
+@dataclass
+class Instr:
+    name: str
+    result_text: str
+    op: str
+    args_text: str
+
+    @property
+    def result_bytes(self) -> int:
+        # result segment may be a tuple "(bf16[..], f32[..])"
+        return sum(_shape_bytes_list(self.result_text))
+
+    def operand_names(self) -> list[str]:
+        prefix = self.args_text.split(")", 1)[0]
+        return _OPERAND_NAME.findall(prefix)
+
+    def operand_bytes(self, symbols: dict[str, int]) -> int:
+        inline = sum(_shape_bytes_list(self.args_text.split(")", 1)[0]))
+        if inline:
+            return inline
+        return sum(symbols.get(n, 0) for n in self.operand_names())
+
+    def result_shape(self) -> tuple[str, str] | None:
+        m = _SHAPE_RE.search(self.result_text)
+        return m.groups() if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if ("{" in line and "->" in line) else None
+        if hdr and not line.lstrip().startswith(("//", "#")):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps
+
+
+_KNOWN_TRIPS = re.compile(r'"known_trip_count":\s*\{"n":"(\d+)"')
+
+
+def _trip_count(while_args: str, cond: Computation | None) -> int:
+    """Prefer XLA's known_trip_count backend config on the while op; fall
+    back to the loop-bound constant in the condition computation."""
+    m = _KNOWN_TRIPS.search(while_args)
+    if m:
+        return int(m.group(1))
+    best = 1
+    if cond is not None:
+        for ins in cond.instrs:
+            if ins.op == "constant":
+                m2 = re.match(r"(\d+)\)", ins.args_text)
+                if m2:
+                    best = max(best, int(m2.group(1)))
+    return best
+
+
+def _multiplicities(comps: dict[str, Computation]) -> dict[str, float]:
+    entry = None
+    for name in comps:
+        # the ENTRY computation is the one nobody calls via while/call
+        entry = name if entry is None else entry
+    # find entry robustly: computation whose name starts with 'main' if present
+    for name in comps:
+        if name.startswith("main"):
+            entry = name
+            break
+    mult = {name: 0.0 for name in comps}
+    if entry is None:
+        return mult
+    mult[entry] = 1.0
+    # topological-ish propagation: iterate until stable (nesting is shallow)
+    for _ in range(12):
+        changed = False
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instrs:
+                if ins.op == "while":
+                    wm = _WHILE_ATTR.search(ins.args_text)
+                    if not wm:
+                        continue
+                    cond_name, body_name = wm.groups()
+                    trips = _trip_count(ins.args_text, comps.get(cond_name))
+                    tgt = m * trips
+                    if body_name in comps and mult.get(body_name, 0.0) < tgt:
+                        mult[body_name] = tgt
+                        changed = True
+                elif ins.op in ("call", "conditional", "async-start"):
+                    for ref in re.findall(r"to_apply=%?([\w\.\-]+)", ins.args_text):
+                        if ref in comps and mult.get(ref, 0.0) < m:
+                            mult[ref] = m
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(ins: Instr, shapes: dict[str, list[int]]) -> float:
+    rs = ins.result_shape()
+    if rs is None:
+        return 0.0
+    _, rdims = rs
+    result_elems = _dims_product(rdims)
+    # contraction size: product of lhs contracting dims
+    lhs_m = _SHAPE_RE.search(ins.args_text.split(")", 1)[0])
+    if lhs_m is not None:
+        lhs_dims = [int(d) for d in lhs_m.group(2).split(",")] if lhs_m.group(2) else []
+    else:
+        names = ins.operand_names()
+        lhs_dims = shapes.get(names[0], []) if names else []
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.args_text)
+    contraction = 1
+    if cm and cm.group(1):
+        for i in cm.group(1).split(","):
+            idx = int(i)
+            if idx < len(lhs_dims):
+                contraction *= lhs_dims[idx]
+    return 2.0 * result_elems * contraction
+
+
+def _collective_bytes(ins: Instr, n_default: int) -> tuple[str, float] | None:
+    if ins.op not in _COLLECTIVES:
+        return None
+    res = ins.result_bytes
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", ins.args_text)
+    if m:
+        n = int(m.group(2))
+    else:
+        m = re.search(r"replica_groups=\{\{([0-9, ]*)\}", ins.args_text)
+        n = len(m.group(1).split(",")) if m else n_default
+    if n <= 1:
+        return (ins.op, 0.0)
+    if ins.op == "all-gather":
+        moved = res * (n - 1) / n
+    elif ins.op == "reduce-scatter":
+        moved = res * (n - 1)
+    elif ins.op == "all-reduce":
+        moved = 2 * res * (n - 1) / n
+    elif ins.op == "all-to-all":
+        moved = res * (n - 1) / n
+    else:  # collective-permute
+        moved = res
+    return (ins.op, moved)
+
+
+def analyze(hlo: str, n_devices: int) -> dict:
+    comps = parse_module(hlo)
+    mult = _multiplicities(comps)
+    # module-wide symbol tables: instruction name -> bytes / dims
+    sym_bytes: dict[str, int] = {}
+    sym_dims: dict[str, list[int]] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            sym_bytes[ins.name] = ins.result_bytes
+            rs = ins.result_shape()
+            if rs:
+                sym_dims[ins.name] = [int(d) for d in rs[1].split(",")] if rs[1] else []
+    # per-fusion-parameter effective read sizes: a fusion that only
+    # dynamic-slices a parameter (the layer-scan weight-stack pattern) reads
+    # the SLICE, not the whole stack — charging the full operand would
+    # overcount HBM traffic by ~n_layers
+    _CALLS = re.compile(r"calls=%?([\w\.\-]+)")
+
+    def _fusion_param_reads(called: Computation) -> list[int | None]:
+        """Effective bytes read per parameter (None = charge full size)."""
+        params = [i for i in called.instrs if i.op == "parameter"]
+        reads: list[int | None] = []
+        for p in params:
+            uses = [
+                i for i in called.instrs
+                if p.name in i.operand_names() and i.op != "parameter"
+            ]
+            if uses and all(u.op in ("dynamic-slice", "gather", "slice") for u in uses):
+                reads.append(sum(u.result_bytes for u in uses))
+            else:
+                reads.append(None)
+        return reads
+
+    def _instr_bytes(ins: Instr) -> float:
+        if ins.op == "dynamic-slice":
+            return 2.0 * ins.result_bytes  # read slice + write result
+        if ins.op == "dynamic-update-slice":
+            names = ins.operand_names()
+            upd = sym_bytes.get(names[1], 0) if len(names) > 1 else 0
+            return 2.0 * upd  # read update + write window (in-place dest)
+        if ins.op == "gather":
+            return 2.0 * ins.result_bytes
+        if ins.op == "fusion":
+            cm_ = _CALLS.search(ins.args_text)
+            called = comps.get(cm_.group(1)) if cm_ else None
+            names = ins.operand_names()
+            if called is not None:
+                # in-place update fusions (scan cache writes): the result
+                # aliases the destination parameter; real traffic is the
+                # update window, not the full buffer
+                local = {i.name: i.result_bytes for i in called.instrs}
+                dus = [i for i in called.instrs if i.op == "dynamic-update-slice"]
+                if dus and any(sym_bytes.get(n, -1) == ins.result_bytes for n in names):
+                    upd = sum(
+                        local.get(d.operand_names()[1], 0)
+                        for d in dus
+                        if len(d.operand_names()) > 1
+                    )
+                    reads = _fusion_param_reads(called)
+                    total = 2.0 * max(upd, 1)  # read update + write window
+                    params = [i for i in called.instrs if i.op == "parameter"]
+                    for j, nme in enumerate(names):
+                        if sym_bytes.get(nme, -1) == ins.result_bytes:
+                            continue  # aliased destination buffer
+                        eff = reads[j] if j < len(reads) else None
+                        total += eff if eff is not None else sym_bytes.get(nme, 0)
+                    return total
+                total = float(ins.result_bytes)
+                reads = _fusion_param_reads(called)
+                for j, nme in enumerate(names):
+                    eff = reads[j] if j < len(reads) else None
+                    total += eff if eff is not None else sym_bytes.get(nme, 0)
+                return total
+            return float(ins.result_bytes) + sum(sym_bytes.get(nme, 0) for nme in names)
+        return float(ins.result_bytes + ins.operand_bytes(sym_bytes))
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0 for k in _COLLECTIVES}
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue  # fusion-internal or dead computation
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += m * _dot_flops(ins, sym_dims)
+            cb = _collective_bytes(ins, n_devices)
+            if cb is not None:
+                coll[cb[0]] += m * cb[1]
+                coll_counts[cb[0]] += 1
+            if ins.op not in _SKIP_BYTES:
+                bytes_accessed += m * _instr_bytes(ins)
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collective_per_device_bytes": {k: int(v) for k, v in coll.items()},
+        "collective_counts": coll_counts,
+        "computations": len(comps),
+        "multiplicity_max": max(mult.values()) if mult else 0,
+    }
+
+
+def top_contributors(hlo: str, n_devices: int, kind: str = "bytes", k: int = 12):
+    """Largest per-instruction contributors (multiplicity applied) — the
+    dry-run 'profiler' for the §Perf loop."""
+    comps = parse_module(hlo)
+    mult = _multiplicities(comps)
+    sym_bytes: dict[str, int] = {}
+    sym_dims: dict[str, list[int]] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            sym_bytes[ins.name] = ins.result_bytes
+            rs = ins.result_shape()
+            if rs:
+                sym_dims[ins.name] = [int(d) for d in rs[1].split(",")] if rs[1] else []
+    rows = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if kind == "flops" and ins.op in ("dot", "convolution"):
+                rows.append((m * _dot_flops(ins, sym_dims), m, ins.op, ins.result_text[:48]))
+            elif kind == "collective":
+                cb = _collective_bytes(ins, n_devices)
+                if cb and cb[1]:
+                    rows.append((m * cb[1], m, ins.op, ins.result_text[:48]))
+            elif kind == "bytes" and ins.op not in _SKIP_BYTES:
+                b = ins.result_bytes + ins.operand_bytes(sym_bytes)
+                rows.append((m * b, m, ins.op, ins.result_text[:48]))
+    rows.sort(reverse=True)
+    return rows[:k]

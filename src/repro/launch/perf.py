@@ -1,0 +1,79 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("DRYRUN_XLA_EXTRA", "")
+    + " --xla_force_host_platform_device_count="
+    + os.environ.get("DRYRUN_DEVICES", "512")
+).strip()
+
+# Perf-iteration driver (EXPERIMENTS.md §Perf): re-lower one cell with config
+# overrides and print the roofline-term delta vs the committed baseline.
+#
+#   PYTHONPATH=src python -m repro.launch.perf --arch minicpm3-4b \
+#       --shape train_4k --mesh single --set remat=dots loss_chunk=512
+#
+# Overrides are ModelConfig fields (bools: true/false; ints/floats parsed).
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def _parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        pass
+    try:
+        return float(v)
+    except ValueError:
+        return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--set", nargs="*", default=[], help="field=value overrides")
+    ap.add_argument("--baseline", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _parse_val(v)
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    res = run_cell(args.arch, args.shape, mesh, overrides=overrides)
+
+    base_fp = Path(args.baseline) / f"{args.arch}__{args.shape}__{args.mesh}.json"
+    base = json.loads(base_fp.read_text()) if base_fp.exists() else None
+
+    t = res["roofline_terms_s"]
+    print(f"\n{'term':14s} {'baseline':>12s} {'now':>12s} {'delta':>8s}")
+    for k in ("compute_s", "memory_s", "collective_s"):
+        b = base["roofline_terms_s"][k] if base else float("nan")
+        d = (t[k] / b - 1) * 100 if base and b else float("nan")
+        print(f"{k:14s} {b:12.4e} {t[k]:12.4e} {d:+7.1f}%")
+    print(f"dominant: {res['dominant']}  (baseline: {base['dominant'] if base else '?'})")
+    print(f"collectives: { {k: f'{v:.2e}' for k, v in res['collectives']['per_device_bytes'].items() if v} }")
+    print(f"temp bytes: {res['memory']['temp_bytes']/1e9:.2f} GB "
+          f"(baseline {base['memory']['temp_bytes']/1e9:.2f} GB)" if base else "")
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    tag = args.tag or "_".join(f"{k}-{v}" for k, v in overrides.items()) or "baseline"
+    fp = outdir / f"{args.arch}__{args.shape}__{args.mesh}__{tag}.json"
+    fp.write_text(json.dumps(res, indent=1))
+    print(f"-> {fp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,310 @@
+"""Attention variants: GQA (+qk-norm), MLA (latent, absorbed decode), cross-attn.
+
+The XLA path never materializes a full [Sq, Sk] score tensor for long
+sequences: scores are computed flash-style over q-chunks with a lax.scan
+(peak live memory per head = q_chunk x Sk). The Pallas kernel path
+(kernels/flash_attention) is selected with cfg.attn_impl="pallas".
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import apply_rope, rmsnorm, rmsnorm_scaleless
+from repro.models.params import ParamDecl
+from repro.types import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+
+def decl_attention(cfg: ModelConfig, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    if cfg.attn_type == "mla" and not cross:
+        qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        decls = {
+            "wq_a": ParamDecl((d, cfg.q_lora_rank), P("data", None)),
+            "q_a_norm": ParamDecl((cfg.q_lora_rank,), P(None), init="ones", dtype="float32"),
+            "wq_b": ParamDecl((cfg.q_lora_rank, nq, qk_head), P(None, "model", None)),
+            "wkv_a": ParamDecl((d, cfg.kv_lora_rank + cfg.qk_rope_head_dim), P("data", None)),
+            "kv_a_norm": ParamDecl((cfg.kv_lora_rank,), P(None), init="ones", dtype="float32"),
+            "wkv_b": ParamDecl(
+                (cfg.kv_lora_rank, nq, cfg.qk_nope_head_dim + cfg.v_head_dim),
+                P(None, "model", None),
+            ),
+            "wo": ParamDecl((nq, cfg.v_head_dim, d), P("model", None, "data"), fan_in_axis=-3),
+        }
+        return decls
+    decls = {
+        "wq": ParamDecl((d, nq, hd), P("data", "model", None)),
+        "wk": ParamDecl((d, nkv, hd), P("data", "model", None)),
+        "wv": ParamDecl((d, nkv, hd), P("data", "model", None)),
+        "wo": ParamDecl((nq, hd, d), P("model", None, "data"), fan_in_axis=-3),
+    }
+    if cfg.use_bias:
+        decls["bq"] = ParamDecl((nq, hd), P("model", None), init="zeros")
+        decls["bk"] = ParamDecl((nkv, hd), P("model", None), init="zeros")
+        decls["bv"] = ParamDecl((nkv, hd), P("model", None), init="zeros")
+    if cfg.qk_norm and not cross:
+        decls["q_norm"] = ParamDecl((hd,), P(None), init="ones", dtype="float32")
+        decls["k_norm"] = ParamDecl((hd,), P(None), init="ones", dtype="float32")
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# Core score computation (q-chunked, grouped)
+# ---------------------------------------------------------------------------
+
+
+def _grouped_attention(
+    q: jax.Array,  # [B, Sq, nq, hd]
+    k: jax.Array,  # [B, Sk, nkv, hdk]
+    v: jax.Array,  # [B, Sk, nkv, hdv]
+    *,
+    scale: float,
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,  # valid prefix length for decode
+    q_chunk: int = 1024,
+    causal_skip: bool = False,
+) -> jax.Array:
+    B, Sq, nq, _ = q.shape
+    Sk, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(B, Sq, nkv, g, q.shape[-1])
+
+    def attend(q_blk, blk_offset):
+        # q_blk: [B, qc, nkv, g, hd]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k, preferred_element_type=jnp.float32)
+        s = s * scale
+        qc = q_blk.shape[1]
+        cols = jnp.arange(Sk)
+        if causal:
+            rows = blk_offset + jnp.arange(qc)
+            mask = cols[None, :] <= rows[:, None]  # [qc, Sk]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        if kv_len is not None:
+            s = jnp.where((cols < kv_len)[None, None, None, None, :], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        return jnp.einsum("bkgqs,bskh->bqkgh", p, v)
+
+    if Sq <= q_chunk:
+        out = attend(qg, q_offset)
+    elif causal_skip and causal and Sq == Sk and kv_len is None:
+        # unrolled q-chunk loop with per-chunk KV prefixes: blocks strictly
+        # above the diagonal are never computed (the Pallas kernel's tile
+        # skip, expressed with static shapes in the XLA path)
+        nc = Sq // q_chunk
+        assert nc * q_chunk == Sq
+        outs = []
+        for i in range(nc):
+            q_blk = qg[:, i * q_chunk : (i + 1) * q_chunk]
+            hi = (i + 1) * q_chunk
+            s = jnp.einsum(
+                "bqkgh,bskh->bkgqs", q_blk, k[:, :hi],
+                preferred_element_type=jnp.float32,
+            ) * scale
+            rows = i * q_chunk + jnp.arange(q_chunk)
+            mask = jnp.arange(hi)[None, :] <= rows[:, None]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+            outs.append(jnp.einsum("bkgqs,bskh->bqkgh", p, v[:, :hi]))
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        nc = int(np.ceil(Sq / q_chunk))
+        pad = nc * q_chunk - Sq
+        qp = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0))) if pad else qg
+        qs = qp.reshape(B, nc, q_chunk, nkv, g, qp.shape[-1]).transpose(1, 0, 2, 3, 4, 5)
+
+        def body(_, xs):
+            idx, q_blk = xs
+            return None, attend(q_blk, q_offset + idx * q_chunk)
+
+        _, outs = jax.lax.scan(body, None, (jnp.arange(nc), qs))
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nc * q_chunk, nkv, g, -1)
+        if pad:
+            out = out[:, :Sq]
+    return out.reshape(B, Sq, nq, -1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (self / cross)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg: ModelConfig, params: dict, xq: jax.Array, xkv: jax.Array):
+    q = jnp.einsum("bsd,dnh->bsnh", xq, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", xkv, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", xkv, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if "q_norm" in params:
+        q = rmsnorm_scaleless(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm_scaleless(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def gqa_full(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    want_cache: bool = False,
+    cache_len: int | None = None,
+):
+    """Train / prefill self-attention. Returns (out, cache | None)."""
+    q, k, v = _project_qkv(cfg, params, x, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    out = _grouped_attention(
+        q, k, v, scale=scale, causal=True, q_chunk=cfg.q_chunk,
+        causal_skip=cfg.causal_skip,
+    )
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    cache = None
+    if want_cache:
+        S = x.shape[1]
+        total = cache_len or S
+        pad = total - S
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+        cache = {"k": kc, "v": vc}
+    return out, cache
+
+
+def gqa_decode(cfg: ModelConfig, params: dict, x: jax.Array, cache: dict, pos: jax.Array, ctx=None):
+    """One-token decode; cache is {'k','v'} of [B, S, nkv, hd]; pos scalar.
+    With ctx + cfg.decode_seq_shard_kv, K/V stay pinned to the seq-sharded
+    cache layout (flash-decoding: local partial scores + softmax-stat psum)
+    instead of being re-gathered per layer."""
+    q, k, v = _project_qkv(cfg, params, x, x)
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    if ctx is not None and cfg.decode_seq_shard_kv:
+        kc = ctx.constrain(kc, "batch", "seq", None, None)
+        vc = ctx.constrain(vc, "batch", "seq", None, None)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    out = _grouped_attention(
+        q, kc, vc, scale=scale, causal=False, kv_len=pos + 1, q_chunk=cfg.q_chunk
+    )
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, {"k": kc, "v": vc}
+
+
+def cross_attention(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    *,
+    ctx_kv: dict | None = None,
+    ctx: jax.Array | None = None,
+):
+    """Cross-attention against (precomputed or raw) context embeddings."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    if ctx_kv is None:
+        k = jnp.einsum("bsd,dnh->bsnh", ctx, params["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", ctx, params["wv"])
+        ctx_kv = {"k": k, "v": v}
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    out = _grouped_attention(
+        q, ctx_kv["k"], ctx_kv["v"], scale=scale, causal=False, q_chunk=cfg.q_chunk
+    )
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, ctx_kv
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention) — compressed KV cache
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(cfg: ModelConfig, params: dict, x: jax.Array, positions: jax.Array):
+    cq = x @ params["wq_a"]
+    cq = rmsnorm_scaleless(cq, params["q_a_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsl,lnh->bsnh", cq, params["wq_b"])
+    q_nope, q_pe = jnp.split(q, [cfg.qk_nope_head_dim], axis=-1)
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_latent(cfg: ModelConfig, params: dict, x: jax.Array, positions: jax.Array):
+    ckv = x @ params["wkv_a"]
+    c_kv, k_pe = jnp.split(ckv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm_scaleless(c_kv, params["kv_a_norm"], cfg.norm_eps)
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return c_kv, k_pe
+
+
+def mla_full(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    want_cache: bool = False,
+    cache_len: int | None = None,
+):
+    """Naive (uncompressed) MLA for train/prefill; caches the latent."""
+    q_nope, q_pe = _mla_q(cfg, params, x, positions)
+    c_kv, k_pe = _mla_latent(cfg, params, x, positions)
+    kv = jnp.einsum("bsl,lnh->bsnh", c_kv, params["wkv_b"])
+    k_nope, v = jnp.split(kv, [cfg.qk_nope_head_dim], axis=-1)
+    nq = cfg.n_heads
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (*k_nope.shape[:3], cfg.qk_rope_head_dim))], axis=-1)
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    out = _grouped_attention(
+        q, k, v, scale=scale, causal=True, q_chunk=cfg.q_chunk,
+        causal_skip=cfg.causal_skip,
+    )
+    out = jnp.einsum("bsnv,nvd->bsd", out, params["wo"])
+    cache = None
+    if want_cache:
+        S = x.shape[1]
+        total = cache_len or S
+        pad = total - S
+        ckc = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))) if pad else c_kv
+        kpc = jnp.pad(k_pe, ((0, 0), (0, pad), (0, 0))) if pad else k_pe
+        cache = {"c_kv": ckc, "k_pe": kpc}
+    return out, cache
+
+
+def mla_decode(cfg: ModelConfig, params: dict, x: jax.Array, cache: dict, pos: jax.Array):
+    """Absorbed decode: attention runs in the latent space (DeepSeek-V2 trick).
+
+    The KV cache holds only [B, S, kv_lora] + [B, S, rope] — a ~10-30x
+    reduction vs. materialized K/V; W_UK / W_UV are folded into the query and
+    output projections so per-step compute stays O(S * kv_lora).
+    """
+    positions = jnp.full((x.shape[0], 1), pos, dtype=jnp.int32)
+    q_nope, q_pe = _mla_q(cfg, params, x, positions)
+    c_kv_new, k_pe_new = _mla_latent(cfg, params, x, positions)
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_pe = jax.lax.dynamic_update_slice(cache["k_pe"], k_pe_new.astype(cache["k_pe"].dtype), (0, pos, 0))
+
+    w_uk = params["wkv_b"][..., : cfg.qk_nope_head_dim]  # [L, nq, nope]
+    w_uv = params["wkv_b"][..., cfg.qk_nope_head_dim :]  # [L, nq, v]
+    q_lat = jnp.einsum("bqnh,lnh->bqnl", q_nope, w_uk)
+    s = jnp.einsum("bqnl,bsl->bnqs", q_lat, c_kv, preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bqnr,bsr->bnqs", q_pe, k_pe, preferred_element_type=jnp.float32)
+    s = s / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    S = c_kv.shape[1]
+    s = jnp.where((jnp.arange(S) <= pos)[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    ctx_lat = jnp.einsum("bnqs,bsl->bqnl", p, c_kv)
+    out_v = jnp.einsum("bqnl,lnv->bqnv", ctx_lat, w_uv)
+    out = jnp.einsum("bqnv,nvd->bqd", out_v, params["wo"])
+    return out, {"c_kv": c_kv, "k_pe": k_pe}

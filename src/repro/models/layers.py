@@ -1,0 +1,111 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamDecl
+from repro.types import ModelConfig
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def decl_rmsnorm(dim: int) -> dict:
+    return {"scale": ParamDecl((dim,), P(None), init="ones", dtype="float32")}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rmsnorm_scaleless(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Per-head qk-norm / gated-norm variant with an explicit scale array."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, n_heads, head_dim]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., None, :]  # [..., S, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def decl_mlp(d_model: int, d_ff: int, use_bias: bool = False) -> dict:
+    decls = {
+        "w_gate": ParamDecl((d_model, d_ff), P("data", "model")),
+        "w_up": ParamDecl((d_model, d_ff), P("data", "model")),
+        "w_down": ParamDecl((d_ff, d_model), P("model", "data")),
+    }
+    if use_bias:
+        decls["b_gate"] = ParamDecl((d_ff,), P("model"), init="zeros")
+        decls["b_up"] = ParamDecl((d_ff,), P("model"), init="zeros")
+        decls["b_down"] = ParamDecl((d_model,), P(None), init="zeros")
+    return decls
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    g = x @ params["w_gate"]
+    u = x @ params["w_up"]
+    if "b_gate" in params:
+        g = g + params["b_gate"]
+        u = u + params["b_up"]
+    h = jax.nn.silu(g) * u
+    y = h @ params["w_down"]
+    if "b_down" in params:
+        y = y + params["b_down"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def decl_embed(cfg: ModelConfig) -> dict:
+    v = cfg.padded_vocab
+    decls = {
+        "embedding": ParamDecl((v, cfg.d_model), P("model", "data"), init="embed"),
+    }
+    if not cfg.tie_embeddings:
+        decls["head"] = ParamDecl((cfg.d_model, v), P("data", "model"))
+    return decls
+
+
+def embed_tokens(params: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def lm_head(params: dict, x: jax.Array) -> jax.Array:
+    if "head" in params:
+        return x @ params["head"]
+    return x @ params["embedding"].T.astype(x.dtype)

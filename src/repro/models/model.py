@@ -1,0 +1,203 @@
+"""LM top level: init, loss, train_step, prefill/decode serve steps,
+and ShapeDtypeStruct input specs for the multi-pod dry-run."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardingCtx
+from repro.models import params as pm
+from repro.models import transformer
+from repro.types import ModelConfig, ShapeConfig, TrainConfig
+from repro.optim.adamw import adamw_update
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    decls = transformer.decl_model(cfg)
+    return pm.materialize(decls, key, jnp.dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    decls = transformer.decl_model(cfg)
+    return pm.abstract(decls, jnp.dtype(cfg.param_dtype))
+
+
+def param_specs(cfg: ModelConfig):
+    return pm.specs(transformer.decl_model(cfg))
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return pm.count_params(transformer.decl_model(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step
+# ---------------------------------------------------------------------------
+
+
+def mask_padded_logits(cfg: ModelConfig, logits):
+    """Padded-vocab logits must not leak probability mass."""
+    if cfg.padded_vocab == cfg.vocab_size:
+        return logits
+    idx = jnp.arange(cfg.padded_vocab)
+    return jnp.where(idx < cfg.vocab_size, logits, -1e9)
+
+
+def _token_nll(cfg: ModelConfig, logits, targets):
+    logits = mask_padded_logits(cfg, logits.astype(jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return logz - tgt
+
+
+def _chunked_nll(cfg: ModelConfig, params, hidden, targets, chunk: int):
+    """LM head + CE over seq chunks: the [B, S, V] logits tensor is never
+    materialized (classic big-vocab memory optimization; chunks are
+    rematerialized in the backward)."""
+    from repro.models.layers import lm_head
+
+    B, S, _ = hidden.shape
+    nc = S // chunk
+    h = hidden.reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+    t = targets.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h_c, t_c = xs
+        nll = _token_nll(cfg, lm_head(params["embed"], h_c), t_c)
+        return acc + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (h, t))
+    return total / (B * S)
+
+
+def loss_fn(cfg: ModelConfig, ctx: ShardingCtx, params, batch):
+    S = batch["tokens"].shape[1]
+    if cfg.loss_chunk and S % cfg.loss_chunk == 0 and "mask" not in batch:
+        hidden, _, aux = transformer.forward(
+            cfg, ctx, params, batch["tokens"],
+            ctx_embed=batch.get("ctx_embed"), mode="train", skip_head=True,
+        )
+        nll = _chunked_nll(cfg, params, hidden, batch["targets"], cfg.loss_chunk)
+        total = nll + cfg.router_aux_weight * aux
+        return total, {"nll": nll, "aux": aux}
+    logits, _, aux = transformer.forward(
+        cfg, ctx, params, batch["tokens"],
+        ctx_embed=batch.get("ctx_embed"), mode="train",
+    )
+    nll = _token_nll(cfg, logits, batch["targets"])
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    nll = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = nll + cfg.router_aux_weight * aux
+    return total, {"nll": nll, "aux": aux}
+
+
+def train_step(cfg: ModelConfig, ctx: ShardingCtx, tc: TrainConfig, params, opt_state, batch):
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, ctx, p, batch), has_aux=True
+    )(params)
+    params, opt_state, opt_stats = adamw_update(params, grads, opt_state, tc)
+    metrics = dict(metrics, loss=loss, **opt_stats)
+    return params, opt_state, metrics
+
+
+def eval_nll(cfg: ModelConfig, ctx: ShardingCtx, params, batch):
+    """Per-sequence mean NLL — used by the UQ wrapper (LMUQModel)."""
+    logits, _, _ = transformer.forward(
+        cfg, ctx, params, batch["tokens"],
+        ctx_embed=batch.get("ctx_embed"), mode="train",
+    )
+    logits = mask_padded_logits(cfg, logits.astype(jnp.float32))
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, batch["targets"][..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - tgt, axis=-1)  # [B]
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+
+def prefill_step(cfg: ModelConfig, ctx: ShardingCtx, params, tokens, ctx_embed=None, cache_len=None):
+    """Full-sequence forward building the KV cache; returns (last_logits, cache)."""
+    S = tokens.shape[1]
+    logits, cache, _ = transformer.forward(
+        cfg, ctx, params, tokens, ctx_embed=ctx_embed,
+        mode="prefill", cache_len=cache_len or S,
+    )
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, ctx: ShardingCtx, params, cache, token, pos):
+    """One-token decode with a filled KV cache; returns (logits, new_cache)."""
+    logits, new_cache, _ = transformer.forward(
+        cfg, ctx, params, token, mode="decode", cache=cache, pos=pos,
+    )
+    return logits[:, -1], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; nothing is allocated)
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardingCtx):
+    """(abstract inputs, partition specs) for one dry-run cell."""
+    B, S = shape.global_batch, shape.seq_len
+    bat = ctx.rules["batch"] if B % ctx.n_data == 0 else None
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        abstract = {"tokens": tok, "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        specs = {"tokens": P(bat, None), "targets": P(bat, None)}
+        if cfg.family == "vlm":
+            d_ctx = cfg.d_ctx or cfg.d_model
+            abstract["ctx_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_ctx_tokens, d_ctx), jnp.dtype(cfg.act_dtype)
+            )
+            specs["ctx_embed"] = P(bat, None, None)
+        return abstract, specs
+    if shape.kind == "prefill":
+        abstract = {"tokens": tok}
+        specs = {"tokens": P(bat, None)}
+        if cfg.family == "vlm":
+            d_ctx = cfg.d_ctx or cfg.d_model
+            abstract["ctx_embed"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_ctx_tokens, d_ctx), jnp.dtype(cfg.act_dtype)
+            )
+            specs["ctx_embed"] = P(bat, None, None)
+        return abstract, specs
+    if shape.kind == "decode":
+        cache_abs, cache_specs = transformer.cache_decl(cfg, B, S, ctx)
+        abstract = {
+            "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": cache_abs,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        specs = {"token": P(bat, None), "cache": cache_specs, "pos": P()}
+        return abstract, specs
+    raise ValueError(shape.kind)
+
+
+def make_synth_batch(cfg: ModelConfig, B: int, S: int, key: jax.Array):
+    """Small concrete batch for smoke tests."""
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab_size, jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+    batch = {"tokens": tokens, "targets": targets}
+    if cfg.family == "vlm":
+        d_ctx = cfg.d_ctx or cfg.d_model
+        batch["ctx_embed"] = jax.random.normal(
+            k2, (B, cfg.n_ctx_tokens, d_ctx), jnp.dtype(cfg.act_dtype)
+        ) * 0.02
+    return batch

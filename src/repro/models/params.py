@@ -1,0 +1,158 @@
+"""Declarative parameter trees.
+
+Modules *declare* parameters (shape, partition spec, initializer) as a pytree
+of `ParamDecl`. Three interpreters consume a declaration tree:
+
+  * `materialize(tree, key, dtype)` -> actual jnp arrays (deterministic per-path
+    RNG folding, so layer stacking and re-init are reproducible),
+  * `abstract(tree, dtype)`         -> jax.ShapeDtypeStruct stand-ins (the
+    multi-pod dry-run never allocates a single parameter byte),
+  * `specs(tree)`                   -> PartitionSpec pytree for in_shardings.
+
+`stack(tree, n)` prepends a scan dimension to every leaf (layer stacking).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    spec: P = P()
+    init: str = "normal"  # normal | zeros | ones | embed | a_log | dt_bias
+    scale: float | None = None  # stddev for normal; None -> 1/sqrt(fan_in)
+    dtype: str | None = None  # override the model param dtype (e.g. float32)
+    fan_in_axis: int = -2  # axis used for default fan-in scaling
+
+
+def is_decl(x) -> bool:
+    return isinstance(x, ParamDecl)
+
+
+def _fold_path(key: jax.Array, path: str) -> jax.Array:
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "big")
+    return jax.random.fold_in(key, h)
+
+
+def _init_leaf(decl: ParamDecl, key: jax.Array, default_dtype) -> jax.Array:
+    dtype = jnp.dtype(decl.dtype) if decl.dtype else default_dtype
+    shape = decl.shape
+    if decl.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if decl.init == "ones":
+        return jnp.ones(shape, dtype)
+    if decl.init == "a_log":  # mamba: A in [1, 16), stored as log
+        a = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(a).astype(dtype)
+    if decl.init == "dt_bias":  # mamba: inverse-softplus of dt ~ U[1e-3, 1e-1]
+        dt = jnp.exp(
+            jax.random.uniform(key, shape, jnp.float32)
+            * (np.log(0.1) - np.log(1e-3))
+            + np.log(1e-3)
+        )
+        inv = dt + jnp.log(-jnp.expm1(-dt))
+        return inv.astype(dtype)
+    if decl.init == "embed":
+        return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+    # normal with fan-in scaling
+    if decl.scale is not None:
+        std = decl.scale
+    else:
+        fan_axis = decl.fan_in_axis
+        if len(shape) == 1:
+            std = 0.02
+        else:
+            std = 1.0 / np.sqrt(shape[fan_axis])
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def _walk(tree: Any, path: str, fn: Callable[[ParamDecl, str], Any]) -> Any:
+    if is_decl(tree):
+        return fn(tree, path)
+    if isinstance(tree, dict):
+        return {k: _walk(v, f"{path}/{k}", fn) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        out = [_walk(v, f"{path}/{i}", fn) for i, v in enumerate(tree)]
+        return type(tree)(out) if isinstance(tree, tuple) else out
+    raise TypeError(f"unexpected node at {path}: {type(tree)}")
+
+
+def materialize(tree: Any, key: jax.Array, dtype) -> Any:
+    return _walk(tree, "", lambda d, p: _init_leaf(d, _fold_path(key, p), dtype))
+
+
+def abstract(tree: Any, dtype) -> Any:
+    def f(d: ParamDecl, _p: str):
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        return jax.ShapeDtypeStruct(d.shape, dt)
+
+    return _walk(tree, "", f)
+
+
+def specs(tree: Any) -> Any:
+    return _walk(tree, "", lambda d, _p: d.spec)
+
+
+def stack(tree: Any, n: int) -> Any:
+    """Prepend a scan/layer dimension of size n to every leaf declaration."""
+
+    def f(d: ParamDecl, _p: str) -> ParamDecl:
+        return replace(
+            d,
+            shape=(n, *d.shape),
+            spec=P(None, *d.spec),
+            fan_in_axis=d.fan_in_axis,  # fan-in axis counted from the end
+        )
+
+    return _walk(tree, "", f)
+
+
+def materialize_stacked(tree: Any, key: jax.Array, dtype, n: int) -> Any:
+    """Materialize a stacked tree with per-layer independent RNG."""
+    stacked_decls = stack(tree, n)
+
+    def f(d: ParamDecl, p: str):
+        base = ParamDecl(d.shape[1:], P(*d.spec[1:]), d.init, d.scale, d.dtype, d.fan_in_axis)
+        ks = jax.random.split(_fold_path(key, p), n)
+        return jnp.stack([_init_leaf(base, ks[i], dtype) for i in range(n)])
+
+    return _walk(stacked_decls, "", f)
+
+
+def count_params(tree: Any) -> int:
+    total = 0
+
+    def f(d: ParamDecl, _p: str):
+        nonlocal total
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+        return None
+
+    _walk(tree, "", f)
+    return total
+
+
+def param_bytes(tree: Any, dtype) -> int:
+    total = 0
+
+    def f(d: ParamDecl, _p: str):
+        nonlocal total
+        n = 1
+        for s in d.shape:
+            n *= s
+        dt = jnp.dtype(d.dtype) if d.dtype else jnp.dtype(dtype)
+        total += n * dt.itemsize
+        return None
+
+    _walk(tree, "", f)
+    return total

@@ -1,0 +1,268 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Chunked algorithm (Dao & Gu, arXiv:2405.21060): the sequence is processed in
+chunks of length Q with a lax.scan carrying the inter-chunk SSM state
+[B, g, r, N, P]; within a chunk the quadratic 'dual' form runs on the MXU.
+The same chunk body is implemented as a Pallas TPU kernel in
+repro/kernels/ssd (this jnp version is its oracle).
+
+Head layout: nh heads of dim P, grouped into g groups sharing B/C (r = nh/g
+heads per group). TP shards heads (and the conv channels) over 'model'.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import rmsnorm_scaleless
+from repro.models.params import ParamDecl
+from repro.types import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+
+def conv_dim(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def decl_ssm(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, ns, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    proj_out = 2 * di + 2 * g * ns + nh  # z, xBC, dt
+    return {
+        "in_proj": ParamDecl((d, proj_out), P("data", "model")),
+        "conv_w": ParamDecl((cfg.ssm_conv, conv_dim(cfg)), P(None, "model"), scale=0.1),
+        "conv_b": ParamDecl((conv_dim(cfg),), P("model"), init="zeros"),
+        "A_log": ParamDecl((nh,), P("model"), init="a_log", dtype="float32"),
+        "D": ParamDecl((nh,), P("model"), init="ones", dtype="float32"),
+        "dt_bias": ParamDecl((nh,), P("model"), init="dt_bias", dtype="float32"),
+        "norm_scale": ParamDecl((di,), P("model"), init="ones", dtype="float32"),
+        "out_proj": ParamDecl((di, d), P("model", "data")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (k small; expressed as shifted adds)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv(params: dict, x: jax.Array, conv_state: jax.Array | None = None):
+    """x: [B, S, C]; conv_state: [B, k-1, C] tail of the previous segment."""
+    w, b = params["conv_w"], params["conv_b"]
+    k = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k)
+    )
+    y = jax.nn.silu(y + b.astype(x.dtype))
+    new_state = xp[:, -(k - 1) :, :]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    B, S = x.shape[:2]
+    g = cfg.ssm_ngroups
+    r = cfg.ssm_nheads // g
+    return x.reshape(B, S, g, r, cfg.ssm_headdim)
+
+
+def ssd_chunk_body(
+    state: jax.Array,  # [B, g, r, N, P]
+    x_c: jax.Array,  # [B, Q, g, r, P]
+    dt_c: jax.Array,  # [B, Q, g, r]  (post-softplus)
+    B_c: jax.Array,  # [B, Q, g, N]
+    C_c: jax.Array,  # [B, Q, g, N]
+    A: jax.Array,  # [g, r] (negative)
+):
+    """One SSD chunk: returns (new_state, y_c). All math in fp32."""
+    dA = dt_c * A  # [B,Q,g,r]
+    cum = jnp.cumsum(dA, axis=1)  # [B,Q,g,r]
+    total = cum[:, -1]  # [B,g,r]
+
+    # intra-chunk (dual quadratic form)
+    cum_t = jnp.moveaxis(cum, 1, -1)  # [B,g,r,Q]
+    L = jnp.exp(cum_t[..., :, None] - cum_t[..., None, :])  # [B,g,r,Q,Q]
+    Q = x_c.shape[1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask, L, 0.0)
+    CB = jnp.einsum("bign,bjgn->bgij", C_c, B_c, preferred_element_type=jnp.float32)
+    dtj = jnp.moveaxis(dt_c, 1, -1)  # [B,g,r,Q] indexed by j
+    scores = CB[:, :, None] * L * dtj[..., None, :]  # [B,g,r,i,j]
+    y_intra = jnp.einsum("bgrij,bjgrp->bigrp", scores, x_c, preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from the carried state
+    y_inter = jnp.einsum("bign,bgrnp->bigrp", C_c, state, preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)[..., None]
+
+    # state update
+    decay_out = jnp.exp(total[:, None] - cum)  # [B,Q,g,r]
+    state_new = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+        "bjgn,bjgr,bjgrp->bgrnp", B_c, dt_c * decay_out, x_c,
+        preferred_element_type=jnp.float32,
+    )
+    return state_new, y_intra + y_inter
+
+
+def ssd_scan(
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, S, g, r, P] fp32
+    dt: jax.Array,  # [B, S, g, r] fp32 (post-softplus)
+    Bm: jax.Array,  # [B, S, g, N] fp32
+    Cm: jax.Array,  # [B, S, g, N] fp32
+    A: jax.Array,  # [g, r]
+    init_state: jax.Array | None = None,
+):
+    B, S, g, r, Pdim = x.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    S_orig = S
+    pad = (-S) % Q
+    if pad:
+        # zero-pad the tail; dt=0 there => no state decay, no contribution
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        x = jnp.pad(x, (*padw, (0, 0)))
+        dt = jnp.pad(dt, padw)
+        Bm = jnp.pad(Bm, padw)
+        Cm = jnp.pad(Cm, padw)
+        S = S + pad
+    nc = S // Q
+    if init_state is None:
+        init_state = jnp.zeros((B, g, r, N, Pdim), jnp.float32)
+
+    def to_chunks(a):
+        return a.reshape(B, nc, Q, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    xs = (to_chunks(x), to_chunks(dt), to_chunks(Bm), to_chunks(Cm))
+
+    def body(state, xs_c):
+        x_c, dt_c, B_c, C_c = xs_c
+        state_new, y_c = ssd_chunk_body(state, x_c, dt_c, B_c, C_c, A)
+        return state_new, y_c
+
+    final_state, ys = jax.lax.scan(body, init_state, xs)
+    y = ys.transpose(1, 0, 2, *range(3, ys.ndim)).reshape(B, S, g, r, Pdim)
+    if pad:
+        y = y[:, :S_orig]
+    return y, final_state
+
+
+def ssd_reference_sequential(x, dt, Bm, Cm, A, init_state=None):
+    """O(S) sequential recurrence — slow oracle for tests."""
+    B, S, g, r, Pdim = x.shape
+    N = Bm.shape[-1]
+    state = init_state if init_state is not None else jnp.zeros((B, g, r, N, Pdim), jnp.float32)
+
+    def step(state, inputs):
+        x_t, dt_t, B_t, C_t = inputs  # [B,g,r,P], [B,g,r], [B,g,N], [B,g,N]
+        dA = jnp.exp(dt_t * A)  # [B,g,r]
+        state = state * dA[..., None, None] + jnp.einsum(
+            "bgn,bgr,bgrp->bgrnp", B_t, dt_t, x_t
+        )
+        y_t = jnp.einsum("bgn,bgrnp->bgrp", C_t, state)
+        return state, y_t
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bm, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+
+
+def _in_proj_split(cfg: ModelConfig, params: dict, x: jax.Array):
+    di, g, ns, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    zxbcdt = x @ params["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + di + 2 * g * ns], axis=-1)
+    return z, xBC, dt
+
+
+def _ssm_pre(cfg: ModelConfig, params: dict, xBC: jax.Array, dt_raw: jax.Array):
+    di, g, ns = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    x_ssm, B_mat, C_mat = jnp.split(xBC, [di, di + g * ns], axis=-1)
+    Bn = B_mat.reshape(*B_mat.shape[:2], g, ns).astype(jnp.float32)
+    Cn = C_mat.reshape(*C_mat.shape[:2], g, ns).astype(jnp.float32)
+    r = cfg.ssm_nheads // g
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    ).reshape(*dt_raw.shape[:2], g, r)
+    xh = _split_heads(cfg, x_ssm).astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32)).reshape(g, r)
+    return xh, dt, Bn, Cn, A
+
+
+def ssm_block(
+    cfg: ModelConfig,
+    params: dict,
+    x: jax.Array,
+    *,
+    cache: dict | None = None,
+    want_cache: bool = False,
+    use_kernel: bool = False,
+):
+    """Full-sequence (train/prefill) Mamba-2 block. Returns (out, cache|None)."""
+    B, S, _ = x.shape
+    z, xBC, dt_raw = _in_proj_split(cfg, params, x)
+    conv_state = cache["conv"] if cache is not None else None
+    xBC, conv_tail = causal_conv(params, xBC, conv_state)
+    xh, dt, Bn, Cn, A = _ssm_pre(cfg, params, xBC, dt_raw)
+    init_state = cache["state"] if cache is not None else None
+    if use_kernel:
+        from repro.kernels.ssd import ops as ssd_ops
+
+        y, final_state = ssd_ops.ssd(cfg, xh, dt, Bn, Cn, A, init_state)
+    else:
+        y, final_state = ssd_scan(cfg, xh, dt, Bn, Cn, A, init_state)
+    D = params["D"].astype(jnp.float32).reshape(cfg.ssm_ngroups, -1)
+    y = y + xh * D[None, None, :, :, None]
+    y = y.reshape(B, S, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm_scaleless(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    new_cache = None
+    if want_cache:
+        new_cache = {"conv": conv_tail, "state": final_state}
+    return out, new_cache
+
+
+def ssm_decode(cfg: ModelConfig, params: dict, x: jax.Array, cache: dict, pos=None):
+    """Single-token recurrent step. cache: {'conv': [B,k-1,C], 'state': [B,g,r,N,P]}."""
+    B = x.shape[0]
+    z, xBC, dt_raw = _in_proj_split(cfg, params, x)  # x: [B,1,d]
+    # conv step
+    w, b = params["conv_w"], params["conv_b"]
+    k = w.shape[0]
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), xBC], axis=1)  # [B,k,C]
+    y_conv = jnp.einsum("bkc,kc->bc", window, w.astype(x.dtype)) + b.astype(x.dtype)
+    xBC_t = jax.nn.silu(y_conv)[:, None, :]
+    new_conv = window[:, 1:, :]
+    xh, dt, Bn, Cn, A = _ssm_pre(cfg, params, xBC_t, dt_raw)
+    # single recurrence step
+    x_t, dt_t, B_t, C_t = xh[:, 0], dt[:, 0], Bn[:, 0], Cn[:, 0]
+    dA = jnp.exp(dt_t * A)
+    state = cache["state"] * dA[..., None, None] + jnp.einsum(
+        "bgn,bgr,bgrp->bgrnp", B_t, dt_t, x_t
+    )
+    y_t = jnp.einsum("bgn,bgrnp->bgrp", C_t, state)
+    D = params["D"].astype(jnp.float32).reshape(cfg.ssm_ngroups, -1)
+    y_t = y_t + x_t * D[None, :, :, None]
+    y = y_t.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = rmsnorm_scaleless(y * jax.nn.silu(z), params["norm_scale"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": new_conv, "state": state}

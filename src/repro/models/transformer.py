@@ -1,0 +1,478 @@
+"""Decoder stack assembly for all assigned architecture families.
+
+A config is compiled to a list of *groups*; each group is a lax.scan over
+identically-shaped units (HLO stays small even for 100-layer models):
+
+  dense/audio : [dense x L]
+  moe         : [dense x first_k_dense] + [moe x (L - first_k_dense)]
+  ssm         : [ssm x L]
+  hybrid      : [ssm x rem] + [(ssm x (period-1) + SHARED attn block) x n]
+                (zamba2: the attention block has ONE set of weights, applied
+                 at every invocation; each invocation has its own KV cache)
+  vlm         : [(self x (period-1) + cross) x n]
+                (llama-3.2-vision: a cross-attn layer every `period` layers)
+
+Caches mirror the group structure with stacked leading dims. In train mode no
+cache is threaded (scan xs carry None); prefill creates caches; decode
+consumes + emits updated caches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import ShardingCtx
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    decl_embed,
+    decl_mlp,
+    decl_rmsnorm,
+    embed_tokens,
+    lm_head,
+    mlp,
+    rmsnorm,
+)
+from repro.models.moe import decl_moe, moe_block
+from repro.models.params import ParamDecl, stack
+from repro.types import ModelConfig
+
+
+@dataclass(frozen=True)
+class Group:
+    kind: str  # dense | moe | ssm | hybrid | vlm
+    count: int
+
+
+def make_groups(cfg: ModelConfig) -> list[Group]:
+    L = cfg.n_layers
+    if cfg.family in ("dense", "audio"):
+        return [Group("dense", L)]
+    if cfg.family == "moe":
+        gs = []
+        if cfg.first_k_dense:
+            gs.append(Group("dense", cfg.first_k_dense))
+        gs.append(Group("moe", L - cfg.first_k_dense))
+        return gs
+    if cfg.family == "ssm":
+        return [Group("ssm", L)]
+    if cfg.family == "hybrid":
+        p = cfg.hybrid_period
+        n, rem = divmod(L, p)
+        gs = []
+        if rem:
+            gs.append(Group("ssm", rem))
+        gs.append(Group("hybrid", n))
+        return gs
+    if cfg.family == "vlm":
+        p = cfg.cross_attn_period
+        assert L % p == 0, "vlm layer count must divide cross_attn_period"
+        return [Group("vlm", L // p)]
+    raise ValueError(cfg.family)
+
+
+# ---------------------------------------------------------------------------
+# Unit parameter declarations
+# ---------------------------------------------------------------------------
+
+
+def _decl_dense_unit(cfg: ModelConfig, moe: bool = False) -> dict:
+    decls = {
+        "ln1": decl_rmsnorm(cfg.d_model),
+        "attn": attn_mod.decl_attention(cfg),
+        "ln2": decl_rmsnorm(cfg.d_model),
+    }
+    if moe:
+        decls["moe"] = decl_moe(cfg)
+    else:
+        decls["mlp"] = decl_mlp(cfg.d_model, cfg.d_ff, cfg.use_bias)
+    return decls
+
+
+def _decl_ssm_unit(cfg: ModelConfig) -> dict:
+    return {"ln": decl_rmsnorm(cfg.d_model), "ssm": ssm_mod.decl_ssm(cfg)}
+
+
+def _decl_cross_unit(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": decl_rmsnorm(cfg.d_model),
+        "xattn": attn_mod.decl_attention(cfg, cross=True),
+        "ln2": decl_rmsnorm(cfg.d_model),
+        "mlp": decl_mlp(cfg.d_model, cfg.d_ff, cfg.use_bias),
+    }
+
+
+def decl_group_unit(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "dense":
+        return _decl_dense_unit(cfg, moe=False)
+    if kind == "moe":
+        return _decl_dense_unit(cfg, moe=True)
+    if kind == "ssm":
+        return _decl_ssm_unit(cfg)
+    if kind == "hybrid":
+        return {"ssm": stack(_decl_ssm_unit(cfg), cfg.hybrid_period - 1)}
+    if kind == "vlm":
+        return {
+            "self": stack(_decl_dense_unit(cfg), cfg.cross_attn_period - 1),
+            "cross": _decl_cross_unit(cfg),
+        }
+    raise ValueError(kind)
+
+
+def decl_model(cfg: ModelConfig) -> dict:
+    decls: dict = {"embed": decl_embed(cfg)}
+    if cfg.family == "vlm":
+        d_ctx = cfg.d_ctx or cfg.d_model
+        decls["ctx_proj"] = ParamDecl((d_ctx, cfg.d_model), P(None, "data"))
+    decls["groups"] = [
+        stack(decl_group_unit(cfg, g.kind), g.count) for g in make_groups(cfg)
+    ]
+    if cfg.family == "hybrid":
+        decls["shared"] = _decl_dense_unit(cfg, moe=False)
+    decls["final_norm"] = decl_rmsnorm(cfg.d_model)
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# Cache declarations (abstract shapes + partition specs)
+# ---------------------------------------------------------------------------
+
+
+def _batch_ax(ctx: ShardingCtx, B: int):
+    return ctx.rules["batch"] if B % ctx.n_data == 0 else None
+
+
+def constrain_act(cfg: ModelConfig, ctx: ShardingCtx, x, mode: str):
+    """Residual-stream sharding between blocks. Baseline: batch only.
+    seq_shard_activations (train) / context_parallel (prefill) additionally
+    shard the SEQ dim over 'model' (Megatron SP / context parallelism)."""
+    sp = (cfg.seq_shard_activations and mode == "train") or (
+        cfg.context_parallel and mode == "prefill"
+    )
+    if sp and x.ndim == 3 and x.shape[1] % max(ctx.n_model, 1) == 0:
+        return ctx.constrain(x, "batch", "seq", None)
+    return ctx.constrain(x, "batch", None, None)
+
+
+def _attn_cache_decl(cfg: ModelConfig, B: int, S: int, ctx: ShardingCtx, lead: tuple[int, ...]):
+    bat = _batch_ax(ctx, B)
+    nm = ctx.n_model
+    lead_sp = (None,) * len(lead)
+    if cfg.attn_type == "mla":
+        seq_ax = "model" if S % nm == 0 else None
+        return {
+            "c_kv": ((*lead, B, S, cfg.kv_lora_rank), (*lead_sp, bat, seq_ax, None)),
+            "k_pe": ((*lead, B, S, cfg.qk_rope_head_dim), (*lead_sp, bat, seq_ax, None)),
+        }
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim
+    kv_ax = "model" if nkv % nm == 0 else None
+    seq_ax = "model" if (kv_ax is None and S % nm == 0) else None
+    sp = (*lead_sp, bat, seq_ax, kv_ax, None)
+    return {
+        "k": ((*lead, B, S, nkv, hd), sp),
+        "v": ((*lead, B, S, nkv, hd), sp),
+    }
+
+
+def _ssm_cache_decl(cfg: ModelConfig, B: int, ctx: ShardingCtx, lead: tuple[int, ...]):
+    bat = _batch_ax(ctx, B)
+    nm = ctx.n_model
+    g, r = cfg.ssm_ngroups, cfg.ssm_nheads // cfg.ssm_ngroups
+    cdim = ssm_mod.conv_dim(cfg)
+    conv_ax = "model" if cdim % nm == 0 else None
+    r_ax = "model" if r % nm == 0 else None
+    lead_sp = (None,) * len(lead)
+    return {
+        "conv": ((*lead, B, cfg.ssm_conv - 1, cdim), (*lead_sp, bat, None, conv_ax)),
+        "state": (
+            (*lead, B, g, r, cfg.ssm_state, cfg.ssm_headdim),
+            (*lead_sp, bat, None, r_ax, None, None),
+        ),
+    }
+
+
+def _is_shape_spec(x) -> bool:
+    return (
+        isinstance(x, tuple)
+        and len(x) == 2
+        and isinstance(x[0], tuple)
+        and isinstance(x[1], tuple)
+    )
+
+
+def _group_cache_decl(cfg: ModelConfig, kind: str, n: int, B: int, S: int, ctx: ShardingCtx):
+    """Returns nested dict of (shape, spec, dtype) leaves for one group."""
+    dt = jnp.dtype(cfg.act_dtype)
+    fp32 = jnp.float32
+
+    def tag(tree, dtype):
+        return jax.tree.map(
+            lambda leaf: (leaf[0], leaf[1], dtype), tree, is_leaf=_is_shape_spec
+        )
+
+    def tag_ssm(tree):
+        return {
+            "conv": (*tree["conv"], dt),
+            "state": (*tree["state"], fp32),
+        }
+
+    if kind in ("dense", "moe"):
+        return {"attn": tag(_attn_cache_decl(cfg, B, S, ctx, (n,)), dt)}
+    if kind == "ssm":
+        return {"ssm": tag_ssm(_ssm_cache_decl(cfg, B, ctx, (n,)))}
+    if kind == "hybrid":
+        p = cfg.hybrid_period
+        return {
+            "ssm": tag_ssm(_ssm_cache_decl(cfg, B, ctx, (n, p - 1))),
+            "attn": tag(_attn_cache_decl(cfg, B, S, ctx, (n,)), dt),
+        }
+    if kind == "vlm":
+        p = cfg.cross_attn_period
+        nc_tok = cfg.n_ctx_tokens
+        bat = _batch_ax(ctx, B)
+        kv_sp = (None, bat, None, "model" if cfg.n_kv_heads % ctx.n_model == 0 else None, None)
+        cross = {
+            "k": ((n, B, nc_tok, cfg.n_kv_heads, cfg.head_dim), kv_sp, dt),
+            "v": ((n, B, nc_tok, cfg.n_kv_heads, cfg.head_dim), kv_sp, dt),
+        }
+        return {
+            "self": tag(_attn_cache_decl(cfg, B, S, ctx, (n, p - 1)), dt),
+            "cross": cross,
+        }
+    raise ValueError(kind)
+
+
+def _is_tagged(x) -> bool:
+    return isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+
+
+def cache_decl(cfg: ModelConfig, B: int, S: int, ctx: ShardingCtx):
+    """Returns (ShapeDtypeStruct tree, PartitionSpec tree) for the full cache."""
+    abstract, specs = [], []
+    for g in make_groups(cfg):
+        tagged = _group_cache_decl(cfg, g.kind, g.count, B, S, ctx)
+        abstract.append(
+            jax.tree.map(lambda t: jax.ShapeDtypeStruct(t[0], t[2]), tagged, is_leaf=_is_tagged)
+        )
+        specs.append(
+            jax.tree.map(lambda t: P(*t[1]), tagged, is_leaf=_is_tagged)
+        )
+    return abstract, specs
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, ctx: ShardingCtx):
+    abstract, _ = cache_decl(cfg, B, S, ctx)
+    return jax.tree.map(lambda sds: jnp.zeros(sds.shape, sds.dtype), abstract)
+
+
+# ---------------------------------------------------------------------------
+# Unit forward functions
+# ---------------------------------------------------------------------------
+
+
+def _dense_unit(
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    params: dict,
+    x: jax.Array,
+    *,
+    positions,
+    mode: str,
+    cache: dict | None,
+    pos,
+    cache_len: int | None,
+    is_moe: bool,
+):
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if cfg.attn_type == "mla":
+        if mode == "decode":
+            a, new_attn = attn_mod.mla_decode(cfg, params["attn"], h, cache["attn"], pos)
+        else:
+            a, new_attn = attn_mod.mla_full(
+                cfg, params["attn"], h, positions=positions,
+                want_cache=(mode == "prefill"), cache_len=cache_len,
+            )
+    else:
+        if mode == "decode":
+            a, new_attn = attn_mod.gqa_decode(cfg, params["attn"], h, cache["attn"], pos, ctx=ctx)
+        else:
+            a, new_attn = attn_mod.gqa_full(
+                cfg, params["attn"], h, positions=positions,
+                want_cache=(mode == "prefill"), cache_len=cache_len,
+            )
+    x = x + a
+    x = constrain_act(cfg, ctx, x, mode)
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if is_moe:
+        m, aux = moe_block(cfg, params["moe"], h2, ctx.mesh)
+    else:
+        m = mlp(params["mlp"], h2)
+    x = x + m
+    x = constrain_act(cfg, ctx, x, mode)
+    new_cache = {"attn": new_attn} if new_attn is not None else None
+    return x, new_cache, aux
+
+
+def _ssm_unit(cfg, ctx, params, x, *, mode, cache, use_kernel=False):
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    if mode == "decode":
+        s, new_ssm = ssm_mod.ssm_decode(cfg, params["ssm"], h, cache["ssm"])
+    else:
+        s, new_ssm = ssm_mod.ssm_block(
+            cfg, params["ssm"], h,
+            cache=None, want_cache=(mode == "prefill"), use_kernel=use_kernel,
+        )
+    x = x + s
+    x = constrain_act(cfg, ctx, x, mode)
+    new_cache = {"ssm": new_ssm} if new_ssm is not None else None
+    return x, new_cache
+
+
+def _cross_unit(cfg, ctx, params, x, *, mode, cache, ctx_embed):
+    h = rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if mode == "decode":
+        a, ctx_kv = attn_mod.cross_attention(cfg, params["xattn"], h, ctx_kv=cache)
+    else:
+        a, ctx_kv = attn_mod.cross_attention(cfg, params["xattn"], h, ctx=ctx_embed)
+    x = x + a
+    h2 = rmsnorm(params["ln2"], x, cfg.norm_eps)
+    x = x + mlp(params["mlp"], h2)
+    x = constrain_act(cfg, ctx, x, mode)
+    new_cache = ctx_kv if mode == "prefill" else None
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack forward
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(cfg: ModelConfig, fn, mode: str):
+    if mode != "train" or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def forward(
+    cfg: ModelConfig,
+    ctx: ShardingCtx,
+    params: dict,
+    tokens: jax.Array,
+    *,
+    ctx_embed: jax.Array | None = None,
+    mode: str = "train",
+    cache: list | None = None,
+    pos=None,
+    cache_len: int | None = None,
+    skip_head: bool = False,
+):
+    """Returns (logits | hidden-states if skip_head, new_cache | None, aux)."""
+    groups = make_groups(cfg)
+    B, S = tokens.shape
+    x = embed_tokens(params["embed"], tokens).astype(jnp.dtype(cfg.act_dtype))
+    x = constrain_act(cfg, ctx, x, mode)
+    if mode == "decode":
+        positions = None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    if cfg.family == "vlm" and ctx_embed is not None:
+        ctx_embed = (ctx_embed @ params["ctx_proj"]).astype(x.dtype)
+
+    use_kernel = cfg.attn_impl == "pallas"
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: list = []
+    train = mode == "train"
+
+    for gi, group in enumerate(groups):
+        gparams = params["groups"][gi]
+        gcache = cache[gi] if cache is not None else None
+
+        if group.kind in ("dense", "moe"):
+            is_moe = group.kind == "moe"
+
+            def body(x, p, c, _moe=is_moe):
+                return _dense_unit(
+                    cfg, ctx, p, x, positions=positions, mode=mode,
+                    cache=c, pos=pos, cache_len=cache_len, is_moe=_moe,
+                )
+
+        elif group.kind == "ssm":
+
+            def body(x, p, c):
+                xo, nc = _ssm_unit(cfg, ctx, p, x, mode=mode, cache=c, use_kernel=use_kernel)
+                return xo, nc, jnp.zeros((), jnp.float32)
+
+        elif group.kind == "hybrid":
+            shared_p = params["shared"]
+
+            def body(x, p, c, _shared=shared_p):
+                def inner(x, xs_i):
+                    pi, ci = xs_i
+                    xo, nci = _ssm_unit(cfg, ctx, pi, x, mode=mode, cache=ci, use_kernel=use_kernel)
+                    return xo, nci
+
+                inner_cache = {"ssm": c["ssm"]} if c is not None else None
+                x, new_ssm = jax.lax.scan(inner, x, (p["ssm"], inner_cache))
+                x, new_attn, aux = _dense_unit(
+                    cfg, ctx, _shared, x, positions=positions, mode=mode,
+                    cache=({"attn": c["attn"]} if c is not None else None),
+                    pos=pos, cache_len=cache_len, is_moe=False,
+                )
+                nc = None
+                if not train:
+                    nc = {"ssm": new_ssm["ssm"], "attn": new_attn["attn"]}
+                return x, nc, aux
+
+        elif group.kind == "vlm":
+
+            def body(x, p, c):
+                def inner(x, xs_i):
+                    pi, ci = xs_i
+                    xo, nci, _ = _dense_unit(
+                        cfg, ctx, pi, x, positions=positions, mode=mode,
+                        cache=ci, pos=pos, cache_len=cache_len, is_moe=False,
+                    )
+                    return xo, nci
+
+                inner_cache = {"attn": c["self"]} if c is not None else None
+                x, new_self = jax.lax.scan(inner, x, (p["self"], inner_cache))
+                x, new_cross = _cross_unit(
+                    cfg, ctx, p["cross"], x, mode=mode,
+                    cache=(c["cross"] if c is not None else None), ctx_embed=ctx_embed,
+                )
+                nc = None
+                if not train:
+                    nc = {
+                        "self": new_self["attn"],
+                        "cross": new_cross if new_cross is not None else c["cross"],
+                    }
+                return x, nc, jnp.zeros((), jnp.float32)
+
+        else:
+            raise ValueError(group.kind)
+
+        def scan_body(x, xs, _body=body):
+            p, c = xs
+            xo, nc, aux = _maybe_remat(cfg, lambda x_, p_, c_: _body(x_, p_, c_), mode)(x, p, c)
+            return xo, (aux if train else (nc, aux))
+
+        x, ys = jax.lax.scan(scan_body, x, (gparams, gcache))
+        if train:
+            auxs = ys
+        else:
+            nc_stacked, auxs = ys
+            new_caches.append(nc_stacked)
+        aux_total = aux_total + jnp.sum(auxs)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if skip_head:
+        return x, (new_caches if not train else None), aux_total
+    logits = lm_head(params["embed"], x)
+    logits = ctx.constrain(logits, "batch", None, "tp")
+    return logits, (new_caches if not train else None), aux_total

@@ -1,0 +1,53 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 2+ pods the gradient all-reduce crosses the (slow) inter-pod links; int8
+quantization cuts those bytes 4x vs fp32 / 2x vs bf16. Error feedback keeps
+the quantization *unbiased over time*: the residual of each step is added to
+the next step's gradient before quantizing, so SGD/Adam converge as if
+uncompressed (Seide et al. 2014; Karimireddy et al. 2019).
+
+Usage inside train_step (see launch/train.py with --grad-compression int8_ef):
+    g_q, new_err = compress_with_feedback(g, err)
+    ... psum(g_q) happens in int8-scaled form ...
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8; returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grad, err_state):
+    """Tree-wise int8 EF compression. Returns (decompressed_grads, new_err).
+
+    The returned grads are what the optimizer sees (quantized values); the
+    residual (grad - dequant) is carried to the next step.
+    """
+
+    def leaf(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), (g32 - deq)
+
+    flat_g, treedef = jax.tree.flatten(grad)
+    flat_e = jax.tree.leaves(err_state)
+    out = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    grads = jax.tree.unflatten(treedef, [o[0] for o in out])
+    errs = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return grads, errs
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,1 @@
+# UQ method namespace; submodules imported directly (repro.uq.qmc, etc.)

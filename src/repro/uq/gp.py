@@ -1,0 +1,110 @@
+"""Gaussian-process emulator (paper §4.3 coarsest level).
+
+Exact GP with constant mean, Matérn-5/2 ARD covariance, (near-)noise-free
+Gaussian likelihood; hyperparameters by Type-II maximum likelihood (Adam on
+the log-marginal-likelihood via jax AD — matching the paper's setup of
+'constant mean, Matérn-5/2 ARD, noise-free likelihood, Type-II MLE').
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _matern52(X1, X2, lengthscales, amp):
+    d = (X1[:, None, :] - X2[None, :, :]) / lengthscales
+    r2 = jnp.sum(d * d, axis=-1)
+    r = jnp.sqrt(r2 + 1e-12)
+    s5r = jnp.sqrt(5.0) * r
+    return amp * (1.0 + s5r + 5.0 * r2 / 3.0) * jnp.exp(-s5r)
+
+
+def _nlml(log_params, X, y):
+    n, d = X.shape
+    ls = jnp.exp(log_params[:d])
+    amp = jnp.exp(log_params[d])
+    noise = jnp.exp(log_params[d + 1])
+    mean = log_params[d + 2]
+    # jitter scales with amp: keeps K PD in fp32 even when a lengthscale
+    # grows unbounded (irrelevant input dim -> K tends to rank-1)
+    K = _matern52(X, X, ls, amp) + (noise + 1e-5 * amp + 1e-8) * jnp.eye(n)
+    L = jnp.linalg.cholesky(K)
+    r = y - mean
+    alpha = jax.scipy.linalg.cho_solve((L, True), r)
+    return (
+        0.5 * r @ alpha
+        + jnp.sum(jnp.log(jnp.diag(L)))
+        + 0.5 * n * jnp.log(2 * jnp.pi)
+    )
+
+
+@dataclass
+class GP:
+    X: np.ndarray
+    y: np.ndarray
+    log_params: np.ndarray  # [d lengthscales, amp, noise, mean]
+    _chol: np.ndarray
+    _alpha: np.ndarray
+
+    @classmethod
+    def fit(
+        cls,
+        X: np.ndarray,
+        y: np.ndarray,
+        n_iters: int = 400,
+        lr: float = 0.05,
+        noise_floor: float = 1e-6,
+        seed: int = 0,
+    ) -> "GP":
+        X = jnp.asarray(np.atleast_2d(X), jnp.float32)
+        yn = np.asarray(y, np.float32).ravel()
+        y_mu, y_sd = float(yn.mean()), float(yn.std() + 1e-12)
+        ys = jnp.asarray((yn - y_mu) / y_sd)
+        n, d = X.shape
+        span = jnp.asarray(np.ptp(np.asarray(X), axis=0) + 1e-6)
+        p0 = jnp.concatenate(
+            [jnp.log(span / 3.0), jnp.array([0.0, np.log(noise_floor), 0.0])]
+        )
+        val_grad = jax.jit(jax.value_and_grad(lambda p: _nlml(p, X, ys)))
+        # Adam with box constraints + non-finite-step guard
+        lo = jnp.concatenate([jnp.log(span) - 6.0, jnp.array([-6.0, np.log(1e-8), -3.0])])
+        hi = jnp.concatenate([jnp.log(span) + 4.0, jnp.array([4.0, np.log(1e-2), 3.0])])
+        p = p0
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        for i in range(n_iters):
+            _, g = val_grad(p)
+            if not bool(jnp.all(jnp.isfinite(g))):
+                break  # keep the last finite iterate
+            m = 0.9 * m + 0.1 * g
+            v = 0.999 * v + 0.001 * g * g
+            mh = m / (1 - 0.9 ** (i + 1))
+            vh = v / (1 - 0.999 ** (i + 1))
+            p = jnp.clip(p - lr * mh / (jnp.sqrt(vh) + 1e-8), lo, hi)
+        ls = jnp.exp(p[:d])
+        amp = jnp.exp(p[d])
+        noise = jnp.exp(p[d + 1])
+        K = _matern52(X, X, ls, amp) + (noise + 1e-5 * amp + 1e-8) * jnp.eye(n)
+        L = np.linalg.cholesky(np.asarray(K, np.float64))
+        alpha = np.linalg.solve(L.T, np.linalg.solve(L, np.asarray(ys - p[d + 2], np.float64)))
+        gp = cls(np.asarray(X), yn, np.asarray(p), L, alpha)
+        gp._ymu, gp._ysd = y_mu, y_sd
+        return gp
+
+    def predict(self, Xq: np.ndarray, return_var: bool = False):
+        Xq = np.atleast_2d(np.asarray(Xq, np.float32))
+        d = self.X.shape[1]
+        ls = np.exp(self.log_params[:d])
+        amp = np.exp(self.log_params[d])
+        mean_c = self.log_params[d + 2]
+        Ks = np.asarray(_matern52(jnp.asarray(Xq), jnp.asarray(self.X), jnp.asarray(ls), amp))
+        mu = mean_c + Ks @ self._alpha
+        mu = self._ymu + self._ysd * mu
+        if not return_var:
+            return mu
+        v = np.linalg.solve(self._chol, Ks.T)
+        var = amp - np.sum(v * v, axis=0)
+        return mu, np.maximum(var, 0.0) * self._ysd**2

@@ -1,0 +1,127 @@
+"""MCMC: random-walk Metropolis, adaptive Metropolis (Haario), pCN.
+
+Host-side implementations (the paper's UQ drivers run on a laptop /
+workstation and treat the model as remote), with ESS / R-hat diagnostics.
+Chains are embarrassingly parallel — `run_chains` matches the paper's
+100-independent-samplers pattern via a thread pool.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass
+class ChainResult:
+    samples: np.ndarray  # [n, d]
+    logposts: np.ndarray  # [n]
+    accept_rate: float
+    n_model_evals: int
+
+
+def random_walk_metropolis(
+    logpost: Callable[[np.ndarray], float],
+    x0: np.ndarray,
+    n_steps: int,
+    prop_cov: np.ndarray,
+    rng: np.random.Generator,
+    adaptive: bool = False,
+    adapt_start: int = 100,
+) -> ChainResult:
+    x = np.asarray(x0, float).copy()
+    d = len(x)
+    L = np.linalg.cholesky(np.atleast_2d(prop_cov))
+    lp = float(logpost(x))
+    samples = np.empty((n_steps, d))
+    lps = np.empty(n_steps)
+    acc = 0
+    n_evals = 1
+    mean = x.copy()
+    cov = np.atleast_2d(prop_cov).copy()
+    sd = 2.4**2 / d
+    for i in range(n_steps):
+        prop = x + L @ rng.standard_normal(d)
+        lp_prop = float(logpost(prop))
+        n_evals += 1
+        if np.log(rng.uniform()) < lp_prop - lp:
+            x, lp = prop, lp_prop
+            acc += 1
+        samples[i] = x
+        lps[i] = lp
+        if adaptive:  # Haario adaptive metropolis
+            w = 1.0 / (i + 2)
+            dx = x - mean
+            mean += w * dx
+            cov = (1 - w) * cov + w * np.outer(dx, dx)
+            if i >= adapt_start:
+                L = np.linalg.cholesky(sd * cov + 1e-10 * np.eye(d))
+    return ChainResult(samples, lps, acc / n_steps, n_evals)
+
+
+def pcn(
+    loglik: Callable[[np.ndarray], float],
+    prior_sample: Callable[[np.random.Generator], np.ndarray],
+    x0: np.ndarray,
+    n_steps: int,
+    beta: float,
+    rng: np.random.Generator,
+) -> ChainResult:
+    """Preconditioned Crank-Nicolson (for Gaussian priors; dimension-robust)."""
+    x = np.asarray(x0, float).copy()
+    ll = float(loglik(x))
+    samples = np.empty((n_steps, len(x)))
+    lls = np.empty(n_steps)
+    acc = 0
+    for i in range(n_steps):
+        xi = prior_sample(rng)
+        prop = np.sqrt(1 - beta**2) * x + beta * xi
+        ll_prop = float(loglik(prop))
+        if np.log(rng.uniform()) < ll_prop - ll:
+            x, ll = prop, ll_prop
+            acc += 1
+        samples[i] = x
+        lls[i] = ll
+    return ChainResult(samples, lls, acc / n_steps, n_steps + 1)
+
+
+def run_chains(make_chain: Callable[[int], ChainResult], n_chains: int, parallel: bool = True):
+    """n independent chains (paper §4.3: 100 parallel MLDA samplers)."""
+    if parallel and n_chains > 1:
+        with ThreadPoolExecutor(max_workers=n_chains) as ex:
+            return list(ex.map(make_chain, range(n_chains)))
+    return [make_chain(i) for i in range(n_chains)]
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+
+
+def effective_sample_size(x: np.ndarray) -> float:
+    """ESS via initial positive sequence of autocorrelations."""
+    x = np.asarray(x, float).ravel()
+    n = len(x)
+    if n < 4:
+        return float(n)
+    xc = x - x.mean()
+    acf = np.correlate(xc, xc, "full")[n - 1 :] / (np.arange(n, 0, -1) * x.var() + 1e-300)
+    s = 0.0
+    for k in range(1, n // 2):
+        pair = acf[2 * k - 1] + acf[2 * k] if 2 * k < n else acf[2 * k - 1]
+        if pair < 0:
+            break
+        s += pair
+    return n / (1 + 2 * s)
+
+
+def gelman_rubin(chains: np.ndarray) -> float:
+    """R-hat over [n_chains, n_samples]."""
+    m, n = chains.shape
+    means = chains.mean(axis=1)
+    B = n * means.var(ddof=1)
+    W = chains.var(axis=1, ddof=1).mean()
+    var_hat = (n - 1) / n * W + B / n
+    return float(np.sqrt(var_hat / (W + 1e-300)))

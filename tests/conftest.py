@@ -1,0 +1,30 @@
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+warnings.filterwarnings("ignore")
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches see
+# the single real CPU device. The multi-pod dry-run sets its own flags in a
+# subprocess (tests/test_sharding_dryrun.py).
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    from repro.distributed.sharding import make_test_mesh
+
+    return make_test_mesh(1, 1)
+
+
+@pytest.fixture(scope="session")
+def ctx11(mesh11):
+    from repro.distributed.sharding import ShardingCtx
+
+    return ShardingCtx(mesh11)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

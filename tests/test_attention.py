@@ -1,0 +1,109 @@
+"""Attention unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models import params as pm
+
+
+def _mk(cfg, key):
+    return pm.materialize(A.decl_attention(cfg), key, jnp.float32)
+
+
+def test_chunked_equals_unchunked():
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    p = _mk(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, 96, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(96)[None], (2, 96))
+    out1, _ = A.gqa_full(cfg, p, x, positions=pos)
+    out2, _ = A.gqa_full(cfg.replace(q_chunk=16), p, x, positions=pos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(split=st.integers(min_value=1, max_value=31))
+def test_causality_property(split):
+    """Changing tokens after position t must not change outputs at <= t."""
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    p = _mk(cfg, jax.random.key(0))
+    S = 32
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (1, S))
+    x1 = jax.random.normal(jax.random.key(1), (1, S, cfg.d_model), jnp.float32)
+    x2 = x1.at[:, split:].set(jax.random.normal(jax.random.key(2), (1, S - split, cfg.d_model)))
+    o1, _ = A.gqa_full(cfg, p, x1, positions=pos)
+    o2, _ = A.gqa_full(cfg, p, x2, positions=pos)
+    np.testing.assert_allclose(
+        np.asarray(o1[:, :split]), np.asarray(o2[:, :split]), atol=1e-5
+    )
+
+
+def test_gqa_matches_dense_reference():
+    """GQA grouped path == repeat-kv dense softmax reference."""
+    cfg = get_config("command-r-35b", reduced=True)  # nq=4, nkv=2
+    p = _mk(cfg, jax.random.key(0))
+    B, S = 2, 48
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out, _ = A.gqa_full(cfg, p, x, positions=pos)
+
+    # reference with repeated kv heads
+    from repro.models.layers import apply_rope
+
+    q, k, v = A._project_qkv(cfg, p, x, x)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    g = cfg.n_heads // cfg.n_kv_heads
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqnh,bknh->bnqk", q, kr) / np.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    pw = jax.nn.softmax(s, axis=-1)
+    ref = jnp.einsum("bnqk,bknh->bqnh", pw, vr)
+    ref = jnp.einsum("bsnh,nhd->bsd", ref, p["wo"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3, atol=3e-4)
+
+
+def test_mla_cache_is_compressed():
+    """The MLA decode cache must be the latent (kv_lora + rope), not full KV."""
+    cfg = get_config("minicpm3-4b", reduced=True)
+    p = _mk(cfg, jax.random.key(0))
+    B, S = 1, 16
+    x = jax.random.normal(jax.random.key(1), (B, S, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    _, cache = A.mla_full(cfg, p, x, positions=pos, want_cache=True)
+    assert cache["c_kv"].shape == (B, S, cfg.kv_lora_rank)
+    assert cache["k_pe"].shape == (B, S, cfg.qk_rope_head_dim)
+    full_kv_elems = S * cfg.n_heads * (cfg.qk_nope_head_dim + cfg.v_head_dim) * 2
+    latent_elems = S * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+    assert latent_elems * 4 < full_kv_elems  # >4x compression even reduced
+
+
+def test_cross_attention_ignores_mask():
+    cfg = get_config("llama-3.2-vision-90b", reduced=True)
+    p = pm.materialize(A.decl_attention(cfg, cross=True), jax.random.key(0), jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model), jnp.float32)
+    ctx_tokens = jax.random.normal(jax.random.key(2), (2, 16, cfg.d_model), jnp.float32)
+    out, kv = A.cross_attention(cfg, p, x, ctx=ctx_tokens)
+    assert out.shape == x.shape
+    # cached ctx kv reproduces the same output
+    out2, _ = A.cross_attention(cfg, p, x, ctx_kv=kv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-6)
+
+
+def test_qk_norm_applied():
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    assert cfg.qk_norm
+    p = _mk(cfg, jax.random.key(0))
+    assert "q_norm" in p and "k_norm" in p
+    # scaling q_norm changes the output
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8))
+    o1, _ = A.gqa_full(cfg, p, x, positions=pos)
+    p2 = dict(p, q_norm=p["q_norm"] * 2.0)
+    o2, _ = A.gqa_full(cfg, p2, x, positions=pos)
+    assert not np.allclose(np.asarray(o1), np.asarray(o2))

@@ -1,0 +1,155 @@
+"""UM-Bridge core tests: interface AD, pools, scheduler, hierarchy, HTTP."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.client import HTTPModel
+from repro.core.hierarchy import MultilevelModel
+from repro.core.interface import JAXModel, Model, as_jax_callable
+from repro.core.pool import ModelPool, ThreadedPool
+from repro.core.scheduler import BatchingExecutor
+from repro.core.server import serve_models
+
+
+@pytest.fixture(scope="module")
+def quad_model():
+    return JAXModel(lambda th: jnp.array([jnp.sum(th**2), th[0] * th[1]]), 2, 2)
+
+
+def test_ad_surface(quad_model):
+    m = quad_model
+    assert m([[1.0, 2.0]]) == [[5.0, 2.0]]
+    # gradient of output 0: [2x, 2y]
+    np.testing.assert_allclose(m.gradient(0, 0, [[1.0, 2.0]], [1.0, 0.0]), [2.0, 4.0])
+    # J v with v = e0: column [2x, y]
+    np.testing.assert_allclose(m.apply_jacobian(0, 0, [[1.0, 2.0]], [1.0, 0.0]), [2.0, 2.0])
+    # H(sum sq) = 2I
+    np.testing.assert_allclose(
+        m.apply_hessian(0, 0, 0, [[1.0, 2.0]], [1.0, 0.0], [1.0, 0.0]), [2.0, 0.0]
+    )
+    assert m.supports_evaluate() and m.supports_gradient()
+
+
+def test_gradient_vs_finite_difference(quad_model):
+    th = np.array([0.7, -1.3])
+    eps = 1e-4
+    f = as_jax_callable(quad_model)
+    for sens in ([1.0, 0.0], [0.0, 1.0], [0.3, 0.7]):
+        g = np.asarray(quad_model.gradient(0, 0, [list(th)], sens))
+        fd = np.zeros(2)
+        for i in range(2):
+            e = np.zeros(2)
+            e[i] = eps
+            fd[i] = (np.dot(f(th + e), sens) - np.dot(f(th - e), sens)) / (2 * eps)
+        np.testing.assert_allclose(g, fd, atol=1e-2)
+
+
+def test_pool_order_and_padding(quad_model):
+    pool = ModelPool(quad_model)
+    thetas = np.random.default_rng(0).standard_normal((7, 2))  # not a multiple
+    out = pool.evaluate(thetas)
+    assert out.shape == (7, 2)
+    np.testing.assert_allclose(out[:, 0], np.sum(thetas**2, axis=1), rtol=1e-5)
+
+
+def test_batching_executor_is_transparent(quad_model):
+    pool = ModelPool(quad_model)
+    with BatchingExecutor(pool, linger_s=0.005) as ex:
+        futs = [ex.submit([i * 0.1, 1.0]) for i in range(17)]
+        for i, f in enumerate(futs):
+            np.testing.assert_allclose(
+                f.result(), [(i * 0.1) ** 2 + 1.0, i * 0.1], rtol=1e-4, atol=1e-5
+            )
+    assert ex.stats["waves"] <= 17  # batching actually batched something
+
+
+class _Counting(Model):
+    def __init__(self, delay=0.0, fail_first=False):
+        super().__init__("forward")
+        self.calls = 0
+        self.delay = delay
+        self.fail_first = fail_first
+
+    def get_input_sizes(self, c=None):
+        return [1]
+
+    def get_output_sizes(self, c=None):
+        return [1]
+
+    def supports_evaluate(self):
+        return True
+
+    def __call__(self, p, c=None):
+        self.calls += 1
+        if self.fail_first and self.calls == 1:
+            raise RuntimeError("boom")
+        if self.delay:
+            time.sleep(self.delay)
+        return [[p[0][0] * 2]]
+
+
+def test_threaded_pool_one_inflight_per_instance():
+    insts = [_Counting(delay=0.05) for _ in range(4)]
+    tp = ThreadedPool(insts)
+    t0 = time.monotonic()
+    out = tp.evaluate([[i] for i in range(8)])
+    dt = time.monotonic() - t0
+    tp.shutdown()
+    np.testing.assert_allclose(out.ravel(), np.arange(8) * 2)
+    # 8 jobs, 4 instances, 0.05s each -> ~2 rounds, definitely < 8 rounds
+    assert dt < 0.05 * 8
+    assert sum(i.calls for i in insts) == 8
+
+
+def test_threaded_pool_retries_failures():
+    insts = [_Counting(fail_first=True), _Counting()]
+    tp = ThreadedPool(insts, max_retries=2)
+    out = tp.evaluate([[3.0]])
+    tp.shutdown()
+    assert out.ravel()[0] == 6.0
+    assert tp.stats["retries"] >= 0  # either retried or the healthy instance got it
+
+
+def test_threaded_pool_straggler_respawn():
+    class _AlwaysSlow(_Counting):
+        def __call__(self, p, c=None):
+            self.calls += 1
+            time.sleep(0.6)
+            return [[p[0][0] * 2]]
+
+    # two requests on [always-slow, fast]: whichever lands on the straggler
+    # is speculatively re-dispatched to the fast instance after the deadline
+    insts = [_AlwaysSlow(), _Counting(delay=0.01)]
+    tp = ThreadedPool(insts, deadline_s=0.05)
+    t0 = time.monotonic()
+    out = tp.evaluate([[1.0], [2.0]])
+    dt = time.monotonic() - t0
+    tp.shutdown()
+    np.testing.assert_allclose(sorted(out.ravel()), [2.0, 4.0])
+    assert dt < 0.5  # re-dispatch beat the 0.6 s straggler
+    assert tp.stats["respawns"] >= 1
+
+
+def test_multilevel_accounting():
+    ml = MultilevelModel([lambda th: th * 2, lambda th: th * 2.01])
+    ml.evaluate(0, np.array([1.0]))
+    ml.evaluate(0, np.array([2.0]))
+    ml.evaluate(1, np.array([1.0]))
+    rep = ml.report()
+    assert ml.counts == [2, 1]
+    assert len(rep["time_s"]) == 2
+
+
+def test_http_error_paths():
+    m = JAXModel(lambda th: th * 2, 2, 2)
+    server, _ = serve_models([m], 45611, background=True)
+    try:
+        hm = HTTPModel("http://127.0.0.1:45611", "forward")
+        with pytest.raises(RuntimeError, match="InvalidInput|input"):
+            hm([[1.0]])  # wrong size
+        with pytest.raises(RuntimeError, match="ModelNotFound"):
+            HTTPModel("http://127.0.0.1:45611", "nope")
+    finally:
+        server.shutdown()

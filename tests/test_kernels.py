@@ -1,0 +1,97 @@
+"""Pallas kernel validation (interpret mode on CPU): shape/dtype sweeps
+against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm_fused
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd.ops import ssd as ssd_op
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.ssd.ssd import ssd_kernel
+
+FLASH_CASES = [
+    # (B, nq, nkv, S, hd, causal, dtype, tol)
+    (2, 4, 2, 256, 64, True, jnp.float32, 2e-5),
+    (1, 4, 4, 128, 128, True, jnp.float32, 2e-5),
+    (2, 8, 2, 256, 64, False, jnp.float32, 2e-5),
+    (1, 2, 1, 512, 64, True, jnp.float32, 2e-5),
+    (1, 4, 2, 256, 64, True, jnp.bfloat16, 2e-2),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=str)
+def test_flash_attention_vs_ref(case):
+    B, nq, nkv, S, hd, causal, dtype, tol = case
+    ks = jax.random.split(jax.random.key(S + nq), 3)
+    q = jax.random.normal(ks[0], (B, nq, S, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, nkv, S, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, nkv, S, hd)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, impl="interpret")
+    ref = attention_ref(q, k, v, causal=causal)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
+    assert err < tol, err
+
+
+SSD_CASES = [
+    # (B, H, G, S, P, N, dtype, tol)
+    (2, 4, 2, 256, 32, 16, jnp.float32, 1e-4),
+    (1, 8, 1, 128, 64, 32, jnp.float32, 1e-4),
+    (1, 2, 2, 384, 32, 16, jnp.float32, 1e-4),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES, ids=str)
+def test_ssd_vs_ref(case):
+    B, H, G, S, P, N, dtype, tol = case
+    ks = jax.random.split(jax.random.key(H + S), 5)
+    x = jax.random.normal(ks[0], (B, H, S, P)).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, H, S))).astype(dtype)
+    Bm = (jax.random.normal(ks[2], (B, G, S, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[3], (B, G, S, N)) * 0.5).astype(dtype)
+    A = -jnp.exp(jax.random.uniform(ks[4], (H,), minval=0.0, maxval=1.5))
+    s0 = jnp.zeros((B, H, N, P), jnp.float32)
+    y, s = ssd_kernel(x, dt, Bm, Cm, A, s0, interpret=True)
+    yr, sr = ssd_ref(x, dt, Bm, Cm, A, s0)
+    rel = float(jnp.max(jnp.abs(y - yr)) / (jnp.max(jnp.abs(yr)) + 1e-9))
+    rel_s = float(jnp.max(jnp.abs(s - sr)) / (jnp.max(jnp.abs(sr)) + 1e-9))
+    assert rel < tol and rel_s < tol, (rel, rel_s)
+
+
+def test_ssd_adapter_matches_model_layout():
+    from repro.configs import get_config
+    from repro.models.ssm import ssd_scan
+
+    cfg = get_config("mamba2-1.3b", reduced=True)
+    g, r = cfg.ssm_ngroups, cfg.ssm_nheads // cfg.ssm_ngroups
+    ks = jax.random.split(jax.random.key(0), 5)
+    x = jax.random.normal(ks[0], (2, 64, g, r, cfg.ssm_headdim), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (2, 64, g, r)))
+    Bm = jax.random.normal(ks[2], (2, 64, g, cfg.ssm_state)) * 0.5
+    Cm = jax.random.normal(ks[3], (2, 64, g, cfg.ssm_state)) * 0.5
+    A = -jnp.exp(jax.random.uniform(ks[4], (g, r)))
+    y1, s1 = ssd_op(cfg, x, dt, Bm, Cm, A, impl="interpret")
+    y2, s2 = ssd_scan(cfg, x, dt, Bm, Cm, A)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=5e-4, atol=5e-4)
+
+
+RMS_CASES = [
+    (64, 128, jnp.float32, 1e-5),
+    (256, 256, jnp.float32, 1e-5),
+    (128, 512, jnp.bfloat16, 2e-2),
+]
+
+
+@pytest.mark.parametrize("case", RMS_CASES, ids=str)
+def test_rmsnorm_vs_ref(case):
+    n, d, dtype, tol = case
+    x = jax.random.normal(jax.random.key(0), (n, d)).astype(dtype)
+    w = (jax.random.normal(jax.random.key(1), (d,)) + 1.0).astype(dtype)
+    out = rmsnorm_fused(x, w, impl="interpret")
+    ref = rmsnorm_ref(x, w)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
+    assert err < tol, err

@@ -1,0 +1,93 @@
+"""Multi-device sharding tests: the dry-run driver on an 8-host-device mesh
+(subprocess so the device-count flag doesn't leak into other tests)."""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run_dryrun(args, devices=8, timeout=560):
+    env = dict(os.environ, DRYRUN_DEVICES=str(devices), PYTHONPATH=str(REPO / "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=timeout, env=env, cwd=str(REPO),
+    )
+
+
+@pytest.mark.slow
+def test_tiny_mesh_dryrun_reduced(tmp_path):
+    """Three families x three shape kinds lower+compile on a 2x2x2 mesh."""
+    r = _run_dryrun(
+        [
+            "--arch", "qwen3-0.6b,deepseek-moe-16b,mamba2-1.3b",
+            "--shape", "train_4k,prefill_32k,decode_32k",
+            "--mesh", "tiny", "--reduced", "--out", str(tmp_path),
+        ]
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    cells = list(tmp_path.glob("*.json"))
+    assert len(cells) == 9
+    for c in cells:
+        data = json.loads(c.read_text())
+        assert data["hlo_flops_per_device"] > 0
+        assert data["t_compile_s"] > 0
+
+
+@pytest.mark.slow
+def test_collective_parser_sees_collectives(tmp_path):
+    r = _run_dryrun(
+        ["--arch", "qwen3-0.6b", "--shape", "train_4k", "--mesh", "tiny",
+         "--reduced", "--out", str(tmp_path)]
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    data = json.loads(next(tmp_path.glob("*.json")).read_text())
+    coll = data["collectives"]["per_device_bytes"]
+    # DP gradient sync must produce all-reduce (or reduce-scatter) bytes
+    assert coll["all-reduce"] + coll["reduce-scatter"] > 0
+    assert data["collective_bytes_per_device"] > 0
+
+
+def test_production_mesh_shapes():
+    """Mesh construction logic (no devices needed beyond 1 — just math)."""
+    from repro.types import MeshConfig
+
+    single = MeshConfig(multi_pod=False)
+    multi = MeshConfig(multi_pod=True)
+    assert single.shape == (16, 16) and single.axes == ("data", "model")
+    assert multi.shape == (2, 16, 16) and multi.axes == ("pod", "data", "model")
+    assert single.n_devices == 256 and multi.n_devices == 512
+
+
+def test_sanitize_spec_drops_nondivisible(ctx11):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import sanitize_spec
+
+    # mesh 1x1: everything divides; fabricate a ctx-like check via spec math
+    sp = sanitize_spec(P("data", "model"), (4, 4), ctx11)
+    assert sp == P("data", "model")
+
+
+def test_baseline_cell_jsons_exist():
+    """The committed full-size dry-run artifacts cover every required cell."""
+    d = REPO / "experiments" / "dryrun"
+    if not d.exists():
+        pytest.skip("full dry-run artifacts not generated yet")
+    from repro.configs import REGISTRY
+    from repro.types import SHAPES
+
+    missing = []
+    for arch, cfg in REGISTRY.items():
+        for shape in SHAPES:
+            if shape == "long_500k" and not cfg.sub_quadratic:
+                continue
+            for mesh in ("single", "multi"):
+                f = d / f"{arch}__{shape}__{mesh}.json"
+                if not f.exists():
+                    missing.append(f.name)
+    assert not missing, missing

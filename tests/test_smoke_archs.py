@@ -1,0 +1,89 @@
+"""Per-architecture smoke tests: REDUCED config of the same family runs one
+forward + one train step on CPU; output shapes + finiteness asserted.
+(Full configs are exercised allocation-free by the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.optim.adamw import adamw_init
+from repro.types import TrainConfig
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch, mesh11, ctx11):
+    cfg = get_config(arch, reduced=True)
+    params = M.init_params(cfg, jax.random.key(0))
+    B, S = 2, 64
+    batch = M.make_synth_batch(cfg, B, S, jax.random.key(1))
+    with mesh11:
+        logits, cache, aux = T.forward(
+            cfg, ctx11, params, batch["tokens"],
+            ctx_embed=batch.get("ctx_embed"), mode="train",
+        )
+        assert logits.shape == (B, S, cfg.padded_vocab)
+        assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+        assert cache is None
+
+        tc = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=4)
+        opt = adamw_init(params, tc)
+        p2, o2, metrics = M.train_step(cfg, ctx11, tc, params, opt, batch)
+        assert np.isfinite(float(metrics["loss"]))
+        # params actually changed
+        l0 = jax.tree.leaves(params)[0]
+        l1 = jax.tree.leaves(p2)[0]
+        assert not np.allclose(np.asarray(l0, np.float32), np.asarray(l1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch, mesh11, ctx11):
+    """decode(prefill(x[:S]), x[S]) == train-mode forward(x[:S+1]) last logits."""
+    cfg = get_config(arch, reduced=True)
+    params = M.init_params(cfg, jax.random.key(0))
+    S = 32
+    batch = M.make_synth_batch(cfg, 2, S + 1, jax.random.key(1))
+    toks, ce = batch["tokens"], batch.get("ctx_embed")
+    with mesh11:
+        _, cache = M.prefill_step(cfg, ctx11, params, toks[:, :S], ctx_embed=ce, cache_len=S + 1)
+        dec, _ = M.decode_step(cfg, ctx11, params, cache, toks[:, S : S + 1], S)
+        full, _, _ = T.forward(cfg, ctx11, params, toks, ctx_embed=ce, mode="train")
+    ref = np.asarray(full[:, -1], np.float32)
+    got = np.asarray(dec, np.float32)
+    err = np.max(np.abs(ref - got)) / (np.max(np.abs(ref)) + 1e-9)
+    assert err < 2e-2, f"{arch}: decode mismatch {err}"
+
+
+def test_param_counts_match_analytic():
+    """Declared parameter tree totals track the analytic param_count()."""
+    from repro.models.params import count_params
+
+    for arch in ("command-r-35b", "qwen3-0.6b", "kimi-k2-1t-a32b", "mamba2-1.3b"):
+        cfg = get_config(arch)
+        declared = count_params(T.decl_model(cfg))
+        analytic, _ = cfg.param_count()
+        # padded vocab and norm scales cause small deviations
+        assert abs(declared - analytic) / analytic < 0.05, arch
+
+
+def test_full_param_totals():
+    """Sanity: the named sizes are in the right ballpark."""
+    expect = {
+        "command-r-35b": (30e9, 40e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "kimi-k2-1t-a32b": (0.95e12, 1.1e12),
+        "mamba2-1.3b": (1.1e9, 1.6e9),
+        "qwen3-0.6b": (0.4e9, 0.8e9),
+        "llama-3.2-vision-90b": (80e9, 100e9),
+        "deepseek-moe-16b": (14e9, 20e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+        "musicgen-medium": (1.2e9, 2.2e9),
+        "minicpm3-4b": (3e9, 5e9),
+    }
+    from repro.models.params import count_params
+
+    for arch, (lo, hi) in expect.items():
+        n = count_params(T.decl_model(get_config(arch)))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of [{lo/1e9}, {hi/1e9}]"

@@ -1,0 +1,192 @@
+"""Substrate tests: optimizer, data determinism, checkpoint, compression,
+fault-tolerant training loop."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.distributed.checkpoint import CheckpointManager
+from repro.optim.adamw import adamw_init, adamw_update, global_norm, lr_schedule
+from repro.optim.compression import compress_with_feedback, init_error_state
+from repro.types import TrainConfig
+
+
+# -- optimizer ------------------------------------------------------------
+
+
+def _numpy_adamw(p, g, m, v, step, tc, decay):
+    lr = float(lr_schedule(tc, jnp.asarray(step)))
+    m = tc.beta1 * m + (1 - tc.beta1) * g
+    v = tc.beta2 * v + (1 - tc.beta2) * g * g
+    mh = m / (1 - tc.beta1**step)
+    vh = v / (1 - tc.beta2**step)
+    upd = mh / (np.sqrt(vh) + tc.eps)
+    if decay:
+        upd = upd + tc.weight_decay * p
+    return p - lr * upd, m, v
+
+
+def test_adamw_matches_numpy_reference():
+    tc = TrainConfig(lr=1e-2, warmup_steps=0, total_steps=100, grad_clip=1e9)
+    params = {"w": jnp.array([[1.0, -2.0], [0.5, 3.0]]), "norm_scale": jnp.array([1.0, 1.0])}
+    opt = adamw_init(params, tc)
+    rng = np.random.default_rng(0)
+    p_np = {k: np.asarray(v).copy() for k, v in params.items()}
+    m_np = {k: np.zeros_like(p) for k, p in p_np.items()}
+    v_np = {k: np.zeros_like(p) for k, p in p_np.items()}
+    for step in range(1, 6):
+        grads = {k: jnp.asarray(rng.standard_normal(v.shape), jnp.float32) for k, v in params.items()}
+        params, opt, _ = adamw_update(params, grads, opt, tc)
+        for k in p_np:
+            decay = k == "w"  # norm params excluded from decay
+            p_np[k], m_np[k], v_np[k] = _numpy_adamw(
+                p_np[k], np.asarray(grads[k]), m_np[k], v_np[k], step, tc, decay
+            )
+    for k in p_np:
+        np.testing.assert_allclose(np.asarray(params[k]), p_np[k], rtol=1e-5, atol=1e-6)
+
+
+def test_grad_clip_bounds_update():
+    tc = TrainConfig(lr=1.0, warmup_steps=0, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params, tc)
+    big = {"w": jnp.full(4, 1e6)}
+    _, _, stats = adamw_update(params, big, opt, tc)
+    assert float(stats["grad_norm"]) > 1e5  # reported norm is pre-clip
+
+
+# -- compression ------------------------------------------------------------
+
+
+def test_int8_ef_error_feedback_is_contractive():
+    """With a CONSTANT gradient, EF quantization error must not accumulate:
+    the running sum of applied (dequantized) gradients tracks the true sum."""
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal(256), jnp.float32)}
+    err = init_error_state(g)
+    applied = np.zeros(256)
+    for step in range(1, 21):
+        deq, err = compress_with_feedback(g, err)
+        applied += np.asarray(deq["w"])
+        true = np.asarray(g["w"]) * step
+        # EF guarantee: |applied - true| <= max quantization error (bounded)
+        assert np.max(np.abs(applied - true)) < np.max(np.abs(np.asarray(g["w"]))) / 64
+
+
+def test_int8_quantize_roundtrip():
+    from repro.optim.compression import dequantize_int8, quantize_int8
+
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(512) * 3, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.max(np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x)))
+    assert err <= float(s) * 0.5 + 1e-6
+
+
+# -- data ---------------------------------------------------------------------
+
+
+def test_data_is_deterministic(ctx11):
+    from repro.data.pipeline import SyntheticLMData
+
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    d1 = SyntheticLMData(cfg, ctx11, 4, 32, seed=7)
+    d2 = SyntheticLMData(cfg, ctx11, 4, 32, seed=7)
+    b1, b2 = d1.batch(13), d2.batch(13)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = d1.batch(14)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    # targets are next-token
+    np.testing.assert_array_equal(
+        np.asarray(b1["tokens"][:, 1:]), np.asarray(b1["targets"][:, :-1])
+    )
+
+
+# -- checkpoint ------------------------------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_checkpoint_roundtrip_property(tmp_path_factory, seed):
+    rng = np.random.default_rng(seed)
+    tree = {
+        "a": jnp.asarray(rng.standard_normal((3, 4)), jnp.float32),
+        "b": [jnp.asarray(rng.integers(0, 10, 5), jnp.int32), {"c": jnp.asarray(rng.standard_normal(2), jnp.float32)}],
+    }
+    d = tmp_path_factory.mktemp(f"ck{seed}")
+    mgr = CheckpointManager(str(d), keep_last=2)
+    mgr.save(3, tree)
+    restored, step = mgr.restore(tree)
+    assert step == 3
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    tree = {"x": jnp.zeros(3)}
+    for s in (1, 5, 9):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 9
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [5, 9]  # oldest GC'd
+
+
+def test_checkpoint_async_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"x": jnp.arange(6, dtype=jnp.float32)}
+    mgr.save_async(2, tree)
+    mgr.wait()
+    restored, step = mgr.restore(tree)
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(6))
+
+
+def test_checkpoint_elastic_resharding(tmp_path, ctx11):
+    """Restore applies target shardings (elastic re-mesh path)."""
+    from repro.distributed.sharding import sanitized_shardings
+    from jax.sharding import PartitionSpec as P
+
+    tree = {"w": jnp.asarray(np.arange(16, dtype=np.float32).reshape(4, 4))}
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, tree)
+    sh = sanitized_shardings(ctx11, tree, {"w": P("data", "model")})
+    restored, _ = mgr.restore(tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+# -- fault-tolerant train loop -------------------------------------------------
+
+
+def test_train_loop_survives_failures_and_nans(tmp_path, ctx11):
+    from repro.launch.train import train
+
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    tc = TrainConfig(
+        lr=1e-3, warmup_steps=1, total_steps=12, checkpoint_every=4,
+        max_step_retries=1,
+    )
+    _, _, hist = train(
+        cfg, ctx11, tc, steps=12, global_batch=2, seq_len=32,
+        ckpt_dir=str(tmp_path), inject_fail=(3,), inject_nan=(6,), log_every=100,
+    )
+    steps_seen = [h[0] for h in hist]
+    assert steps_seen[-1] == 11
+    losses = [h[1] for h in hist]
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]  # still learning through the faults
+
+
+def test_train_loop_resumes_from_checkpoint(tmp_path, ctx11):
+    from repro.launch.train import train
+
+    cfg = get_config("qwen3-0.6b", reduced=True)
+    tc = TrainConfig(lr=1e-3, warmup_steps=1, total_steps=10, checkpoint_every=5)
+    train(cfg, ctx11, tc, steps=5, global_batch=2, seq_len=32, ckpt_dir=str(tmp_path), log_every=100)
+    _, _, hist = train(
+        cfg, ctx11, tc, steps=10, global_batch=2, seq_len=32,
+        ckpt_dir=str(tmp_path), log_every=100,
+    )
+    assert hist[0][0] == 5  # resumed, not restarted

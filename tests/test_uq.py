@@ -1,0 +1,209 @@
+"""UQ method tests: distributions, Sobol, sparse grids, KDE, GP, MCMC, MLDA."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.uq.distributions import Beta, Normal, Triangular, TruncatedNormal, Uniform
+from repro.uq.gp import GP
+from repro.uq.kde import kde
+from repro.uq.mcmc import effective_sample_size, gelman_rubin, random_walk_metropolis
+from repro.uq.mlda import delayed_acceptance, mlda
+from repro.uq.monte_carlo import monte_carlo
+from repro.uq.qmc import cub_qmc_sobol, sobol
+from repro.uq import sparse_grid as sg
+
+DISTS = [
+    Uniform(-1.0, 3.0),
+    Normal(0.5, 2.0),
+    Beta(10.0, 10.0, -6.776, -5.544),  # the paper's draft distribution
+    Triangular(0.25, 0.41),  # the paper's Froude distribution
+    TruncatedNormal(0.0, 1.0, -1.5, 2.0),
+]
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: type(d).__name__)
+def test_pdf_integrates_to_one(dist):
+    lo, hi = dist.support()
+    xs = np.linspace(lo, hi, 20001)
+    assert abs(np.trapezoid(dist.pdf(xs), xs) - 1.0) < 1e-3
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: type(d).__name__)
+def test_ppf_is_inverse_cdf(dist):
+    lo, hi = dist.support()
+    us = np.linspace(0.01, 0.99, 25)
+    xs = dist.ppf(us)
+    # numeric CDF at ppf(u) == u
+    grid = np.linspace(lo, hi, 40001)
+    pdf = dist.pdf(grid)
+    cdf = np.cumsum(pdf) * (grid[1] - grid[0])
+    got = np.interp(xs, grid, cdf)
+    np.testing.assert_allclose(got, us, atol=5e-3)
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: type(d).__name__)
+def test_sampling_moments(dist, rng):
+    s = dist.sample(rng, 40000)
+    lo, hi = dist.support()
+    xs = np.linspace(lo, hi, 20001)
+    mean_ref = np.trapezoid(xs * dist.pdf(xs), xs)
+    assert abs(s.mean() - mean_ref) < 0.05 * (hi - lo)
+
+
+# -- Sobol --------------------------------------------------------------------
+
+
+def test_sobol_matches_scipy():
+    from scipy.stats import qmc as sq
+
+    for d in (1, 2, 5, 13, 21):
+        mine = sobol(128, d)
+        ref = sq.Sobol(d, scramble=False).random(128)
+        assert np.max(np.abs(mine - ref)) < 1e-8
+
+
+def test_sobol_stratification():
+    """(0,m,s)-net property: 2^4 points -> one per dyadic interval of size
+    1/16 in each 1-d projection."""
+    pts = sobol(16, 5)
+    for j in range(5):
+        cells = np.floor(pts[:, j] * 16).astype(int)
+        assert sorted(cells) == list(range(16))
+
+
+def test_sobol_scramble_preserves_uniformity(rng):
+    pts = sobol(256, 3, scramble_seed=42)
+    assert pts.shape == (256, 3)
+    assert np.all((pts >= 0) & (pts < 1))
+    assert abs(pts.mean() - 0.5) < 0.02
+
+
+def test_cubature_converges():
+    res = cub_qmc_sobol(lambda u: np.sin(2 * np.pi * u).sum(1, keepdims=True) + 1.0, 4, abs_tol=5e-4)
+    assert res.converged
+    assert abs(res.mean[0] - 1.0) < 5e-3
+
+
+# -- sparse grids -------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    coefs=st.lists(st.floats(-2, 2), min_size=6, max_size=6),
+    w=st.integers(min_value=3, max_value=5),
+)
+def test_sparse_grid_polynomial_exactness(coefs, w):
+    """Total-degree-w Smolyak-Leja grids reproduce total-degree-w polys."""
+    c = np.asarray(coefs)
+
+    def f(X):
+        x, y = X[:, 0], X[:, 1]
+        return (c[0] + c[1] * x + c[2] * y + c[3] * x * y + c[4] * x**2 + c[5] * y**2)[:, None]
+
+    kf = [sg.knots_uniform_leja(-1, 1), sg.knots_uniform_leja(-1, 1)]
+    S = sg.smolyak_grid(2, w, kf)
+    Sr = sg.reduce_sparse_grid(S)
+    vals = sg.evaluate_on_sparse_grid(f, Sr)
+    xq = np.random.default_rng(1).uniform(-1, 1, (20, 2))
+    np.testing.assert_allclose(sg.interpolate_on_sparse_grid(S, Sr, vals, xq), f(xq), atol=1e-8)
+
+
+def test_sparse_grid_nested_reuse():
+    kf = [sg.knots_uniform_leja(-1, 1)] * 2
+    S1 = sg.smolyak_grid(2, 3, kf)
+    Sr1 = sg.reduce_sparse_grid(S1)
+    S2 = sg.smolyak_grid(2, 5, kf)
+    Sr2 = sg.reduce_sparse_grid(S2)
+    calls = {"n": 0}
+
+    def f(X):
+        calls["n"] += len(X)
+        return np.sum(X, axis=1, keepdims=True)
+
+    v1 = sg.evaluate_on_sparse_grid(f, Sr1)
+    n1 = calls["n"]
+    sg.evaluate_on_sparse_grid(f, Sr2, previous=(Sr1, v1))
+    assert calls["n"] - n1 == len(Sr2.points) - len(Sr1.points)  # strict nesting
+
+
+def test_leja_knots_are_nested_and_in_support():
+    kn = sg.knots_beta_leja(10, 10, -6.776, -5.544)
+    k5, k9 = kn(5), kn(9)
+    np.testing.assert_allclose(k9[:5], k5)
+    assert np.all(k9 >= -6.776) and np.all(k9 <= -5.544)
+
+
+# -- KDE ----------------------------------------------------------------------
+
+
+def test_kde_integral_and_positive_support(rng):
+    s = rng.lognormal(0.5, 0.3, 4000)
+    d, p = kde(s, support="positive", n_points=500)
+    assert np.all(p > 0)
+    assert abs(np.trapezoid(d, p) - 1.0) < 0.02
+
+
+# -- GP -----------------------------------------------------------------------
+
+
+def test_gp_interpolates_training_points(rng):
+    X = rng.uniform(-1, 1, (25, 2))
+    y = np.sin(3 * X[:, 0]) * np.cos(2 * X[:, 1])
+    gp = GP.fit(X, y, n_iters=200)
+    np.testing.assert_allclose(gp.predict(X), y, atol=5e-3)
+    mu, var = gp.predict(X, return_var=True)
+    assert np.all(var >= 0)
+
+
+def test_gp_ard_lengthscales_detect_irrelevant_dim(rng):
+    X = rng.uniform(-1, 1, (60, 2))
+    y = np.sin(4 * X[:, 0])  # dim 1 irrelevant
+    gp = GP.fit(X, y, n_iters=300)
+    ls = np.exp(gp.log_params[:2])
+    assert ls[1] > 1.5 * ls[0]  # ARD: irrelevant dim gets longer lengthscale
+
+
+# -- MCMC / MLDA ----------------------------------------------------------------
+
+
+def test_rwm_recovers_gaussian(rng):
+    lp = lambda x: -0.5 * float(np.sum(x**2))
+    r = random_walk_metropolis(lp, np.zeros(2), 6000, 1.4 * np.eye(2), rng, adaptive=True)
+    s = r.samples[1000:]
+    assert np.all(np.abs(s.mean(0)) < 0.15)
+    assert np.all(np.abs(s.var(0) - 1.0) < 0.2)
+    assert 0.1 < r.accept_rate < 0.6
+    assert effective_sample_size(s[:, 0]) > 100
+
+
+def test_mlda_matches_fine_posterior(rng):
+    """2-level MLDA with a biased coarse model still targets the fine
+    posterior (the DA correction removes coarse bias)."""
+    lp_fine = lambda x: -0.5 * float(np.sum((x - 1.0) ** 2))
+    lp_coarse = lambda x: -0.5 * float(np.sum((x + 0.5) ** 2 / 2.0))  # wrong mean+var
+    res = mlda([lp_coarse, lp_fine], np.zeros(2), 5000, [4], 0.7 * np.eye(2), rng)
+    s = res.samples[500:]
+    assert np.all(np.abs(s.mean(0) - 1.0) < 0.15)
+    assert np.all(np.abs(s.var(0) - 1.0) < 0.25)
+    # coarse level was actually used for proposals
+    assert res.evals_per_level[0] > res.evals_per_level[1]
+
+
+def test_mlda_three_levels(rng):
+    lp2 = lambda x: -0.5 * float(np.sum(x**2))
+    lp1 = lambda x: -0.5 * float(np.sum((x - 0.2) ** 2 / 1.2))
+    lp0 = lambda x: -0.5 * float(np.sum((x + 0.3) ** 2 / 1.5))
+    res = mlda([lp0, lp1, lp2], np.zeros(1), 3000, [5, 3], np.eye(1), rng)
+    s = res.samples[300:]
+    assert abs(s.mean()) < 0.15
+    assert res.evals_per_level[0] > res.evals_per_level[1] > res.evals_per_level[2]
+
+
+def test_monte_carlo_ci(rng):
+    res = monte_carlo(
+        lambda X: (X**2).sum(1, keepdims=True),
+        lambda r, n: r.standard_normal((n, 3)),
+        4000,
+        rng,
+    )
+    assert abs(res.mean[0] - 3.0) < 4 * res.std_error[0] + 0.05
