@@ -16,6 +16,7 @@ import time
 import numpy as np
 
 from repro.apps.composite import CompositeModel, LENGTH_MM, WIDTH_MM
+from repro.core.fabric import EvaluationFabric, ModelBackend
 from repro.uq.kde import kde
 from repro.uq.qmc import sobol
 
@@ -37,11 +38,13 @@ def _theta_from_uniform(u: np.ndarray) -> np.ndarray:
 
 def run(n_samples: int = 256, n_full_checks: int = 4):
     model = CompositeModel()
+    fabric = EvaluationFabric(ModelBackend(model), cache_size=0)
     thetas = _theta_from_uniform(sobol(n_samples, 3, scramble_seed=11))
 
     t0 = time.monotonic()
-    energies = np.array([model([list(t)], {"mode": "rom"})[0][0] for t in thetas])
+    energies = fabric.evaluate_batch(thetas, {"mode": "rom"})[:, 0]
     t_rom = time.monotonic() - t0
+    fabric.shutdown()
 
     # ROM-vs-full speedup + accuracy on a subsample
     t0 = time.monotonic()

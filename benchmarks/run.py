@@ -47,7 +47,11 @@ def main() -> None:
             dt = time.monotonic() - t0
             derived = ""
             if name.startswith("weak_scaling") and out:
-                derived = f"min_efficiency={min(r['efficiency'] for r in out):.3f}"
+                rows = out["weak_scaling"] if isinstance(out, dict) else out
+                derived = f"min_efficiency={min(r['efficiency'] for r in rows):.3f}"
+                if isinstance(out, dict) and "http_round_trips" in out:
+                    rt = out["http_round_trips"]["round_trip_reduction"]
+                    derived += f";http_rt_reduction={rt:.1f}x"
             elif name.startswith("sparse_grid") and out:
                 derived = f"speedup={out['speedup']:.1f};evals={out['total_evals']}"
             elif name.startswith("qmc") and out:

@@ -6,6 +6,11 @@ of instances (4 evals per instance); report wall time and parallel
 efficiency per instance count. The paper's L2-Sea instances cost ~2.5 s; we
 scale the cost down so the sweep finishes on one host (the pool overhead
 being measured is the same queueing/dispatch code path).
+
+`run_http` additionally measures the HTTP dispatch cost the paper's load
+balancer pays per point: the same workload through per-point `/Evaluate`
+round-trips vs the fabric's batched `/EvaluateBatch` fan-out, reporting the
+round-trip reduction.
 """
 from __future__ import annotations
 
@@ -13,8 +18,11 @@ import time
 
 import numpy as np
 
+from repro.core.client import HTTPModel
+from repro.core.fabric import EvaluationFabric, HTTPBackend
 from repro.core.interface import Model
 from repro.core.pool import ThreadedPool
+from repro.core.server import serve_models
 
 
 class _FixedCostModel(Model):
@@ -66,9 +74,67 @@ def run(eval_cost_s: float = 0.1, counts=(1, 2, 4, 8, 16, 32, 64), evals_per_ins
     return rows
 
 
+def run_http(
+    n_servers: int = 4,
+    n_points: int = 64,
+    eval_cost_s: float = 0.005,
+    base_port: int = 46310,
+):
+    """Per-point `/Evaluate` vs batched `/EvaluateBatch` round-trips for the
+    same workload over the same servers (the §3 LB hop, minus k8s)."""
+    servers = []
+    urls = []
+    thetas = np.tile(np.linspace(0.0, 1.0, n_points)[:, None], (1, 16))
+    try:
+        for i in range(n_servers):
+            server, _ = serve_models([_FixedCostModel(eval_cost_s)], base_port + i, background=True)
+            servers.append(server)
+            urls.append(f"http://127.0.0.1:{base_port + i}")
+        # per-point path: one /Evaluate round-trip per point (ThreadedPool of
+        # HTTP clients — the seed's only HTTP dispatch mode)
+        clients = [HTTPModel(u) for u in urls]
+        for c in clients:
+            c.round_trips = 0  # ignore handshake requests
+        pool = ThreadedPool(clients)
+        t0 = time.monotonic()
+        pool.evaluate(thetas)
+        wall_pp = time.monotonic() - t0
+        pool.shutdown()
+        rt_per_point = sum(c.round_trips for c in clients)
+
+        # batched path: the fabric fans /EvaluateBatch out across servers
+        clients_b = [HTTPModel(u) for u in urls]
+        for c in clients_b:
+            c.round_trips = 0
+        fabric = EvaluationFabric(HTTPBackend(clients_b), cache_size=0)
+        t0 = time.monotonic()
+        fabric.evaluate_batch(thetas)
+        wall_b = time.monotonic() - t0
+        rt_batched = sum(c.round_trips for c in clients_b)
+        fabric.shutdown()
+    finally:
+        for s in servers:
+            s.shutdown()
+    ratio = rt_per_point / max(rt_batched, 1)
+    print(f"HTTP round-trips for {n_points} points on {n_servers} servers: "
+          f"per-point={rt_per_point} batched={rt_batched} "
+          f"({ratio:.1f}x fewer), wall {wall_pp:.2f}s -> {wall_b:.2f}s")
+    return {
+        "n_points": n_points,
+        "n_servers": n_servers,
+        "round_trips_per_point_path": rt_per_point,
+        "round_trips_batched_path": rt_batched,
+        "round_trip_reduction": ratio,
+        "wall_per_point_s": round(wall_pp, 3),
+        "wall_batched_s": round(wall_b, 3),
+    }
+
+
 def main(quick: bool = False):
     counts = (1, 2, 4, 8, 16) if quick else (1, 2, 4, 8, 16, 32, 64)
-    return run(eval_cost_s=0.05 if quick else 0.1, counts=counts)
+    rows = run(eval_cost_s=0.05 if quick else 0.1, counts=counts)
+    http = run_http(n_servers=2 if quick else 4, n_points=32 if quick else 64)
+    return {"weak_scaling": rows, "http_round_trips": http}
 
 
 if __name__ == "__main__":

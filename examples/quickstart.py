@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.client import HTTPModel, supported_models
+from repro.core.fabric import EvaluationFabric
 from repro.core.interface import JAXModel, Model
 from repro.core.pool import ModelPool
 from repro.core.server import serve_models
@@ -52,6 +53,16 @@ def main():
     pool = ModelPool(jm)
     thetas = np.random.default_rng(0).standard_normal((10, 2))
     print("pool(10 points) ->", pool.evaluate(thetas).ravel().round(2))
+
+    # 5) the EvaluationFabric is the one dispatch layer UQ drivers talk to:
+    #    per-point submits batch into waves, duplicates hit the LRU cache,
+    #    and the SAME API fans out over HTTP servers or thread pools
+    with EvaluationFabric(pool) as fabric:
+        futs = [fabric.submit(t) for t in thetas] + [fabric.submit(thetas[0])]
+        print("fabric(11 submits) ->", np.round([f.result()[0] for f in futs], 2))
+        t = fabric.telemetry()
+        print(f"fabric telemetry: {t['waves']} waves, {t['points']} evals, "
+              f"{t['cache_hits'] + t['coalesced']} deduped")
 
     server.shutdown()
 

@@ -8,8 +8,8 @@ Run: PYTHONPATH=src python examples/serve_uq.py
 import numpy as np
 
 from repro.apps.lm_model import LMUQModel
+from repro.core.fabric import EvaluationFabric
 from repro.core.pool import ModelPool
-from repro.core.scheduler import BatchingExecutor
 from repro.uq import sparse_grid as sg
 from repro.uq.monte_carlo import monte_carlo
 
@@ -19,15 +19,17 @@ def main():
     # same wrapper drives a 104B model on the production mesh)
     lm = LMUQModel("qwen3-0.6b", reduced=True, batch=2, seq=64)
     pool = ModelPool(lm)
+    fabric = EvaluationFabric(pool)  # ONE dispatch layer for every request kind
     print(f"serving {lm.name}: {pool.n_instances} instance(s)")
 
-    # 1) batched requests through the pool (the paper's cluster dispatch)
+    # 1) batched requests through the fabric (the paper's cluster dispatch)
     with lm.ctx.mesh:
-        # sparse-grid surrogate of NLL(emb_scale, temperature)
+        # sparse-grid surrogate of NLL(emb_scale, temperature) — the driver
+        # accepts the fabric directly in place of a bare callable
         knots = [sg.knots_uniform_leja(0.7, 1.3), sg.knots_uniform_leja(0.7, 1.3)]
         S = sg.smolyak_grid(2, 4, knots)
         Sr = sg.reduce_sparse_grid(S)
-        vals = sg.evaluate_on_sparse_grid(lambda X: pool.evaluate(X), Sr)
+        vals = sg.evaluate_on_sparse_grid(fabric, Sr)
         print(f"sparse grid: {len(Sr.points)} LM evaluations")
 
         # surrogate-based forward UQ: emb_scale ~ U(0.9,1.1), temp ~ U(0.8,1.2)
@@ -37,15 +39,18 @@ def main():
         print(f"NLL under calibration uncertainty: mean={nlls.mean():.4f} "
               f"std={nlls.std():.4f} p95={np.percentile(nlls, 95):.4f}")
 
-        # 2) per-point submits via the BatchingExecutor (prototype-style code)
-        with BatchingExecutor(pool) as ex:
-            futs = [ex.submit([1.0 + 0.02 * i, 1.0]) for i in range(8)]
-            sens = [float(f.result()[0]) for f in futs]
+        # 2) per-point submits (prototype-style code) batch transparently
+        futs = [fabric.submit([1.0 + 0.02 * i, 1.0]) for i in range(8)]
+        sens = [float(f.result()[0]) for f in futs]
         print("NLL vs embedding scale 1.00..1.14:", np.round(sens, 4))
+        t = fabric.telemetry()
+        print(f"fabric: {t['waves']} waves for {t['points']} evaluations "
+              f"(mean wave {t['mean_wave_size']:.1f})")
 
         # 3) gradients through the SAME interface (AD, no extra model code)
         g = lm.gradient(0, 0, [[1.0, 1.0]], [1.0])
         print(f"dNLL/d(emb_scale, temp) = ({g[0]:.4f}, {g[1]:.4f})")
+    fabric.shutdown()
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ Run: PYTHONPATH=src python examples/sparse_grid_uq.py
 import numpy as np
 
 from repro.apps.l2sea import DRAFT_RANGE, FROUDE_RANGE, L2SeaModel, make_inputs
+from repro.core.fabric import EvaluationFabric
 from repro.core.pool import ThreadedPool
 from repro.uq import sparse_grid as sg
 from repro.uq.distributions import Beta, Triangular
@@ -13,13 +14,14 @@ from repro.uq.kde import kde
 
 
 def main():
-    # uri = 'http://104.199.68.148'; model = HTTPModel(uri, 'forward')
-    # (here: in-process pool of 8 instances — the UQ code is identical)
-    pool = ThreadedPool([L2SeaModel() for _ in range(8)])
+    # fabric = EvaluationFabric(['http://104.199.68.148'])  # the real server
+    # (here: in-process pool of 8 instances — the UQ code is identical;
+    # swapping the backend is the paper's separation-of-concerns claim)
+    fabric = EvaluationFabric(ThreadedPool([L2SeaModel() for _ in range(8)]))
     config = {"fidelity": 3, "sinkoff": "y", "trimoff": "y"}
 
     # L2-Sea takes 16 inputs but we use only the first two
-    f = lambda y: pool.evaluate(make_inputs(y), config)
+    f = lambda y: fabric.evaluate_batch(make_inputs(y), config)
 
     # knots for F (triangular) and D (beta), nested Leja families
     knots_froude = sg.knots_triangular_leja(*FROUDE_RANGE)
@@ -43,7 +45,7 @@ def main():
     ksd_pdf, ksd_points = kde(surrogate_evals[:, 0], support="positive", bandwidth=0.1)
     mode = ksd_points[np.argmax(ksd_pdf)]
     print(f"PDF of R_T: mode ~ {mode:.1f} kN, mean ~ {surrogate_evals.mean():.1f} kN")
-    pool.shutdown()
+    fabric.shutdown()
 
 
 if __name__ == "__main__":

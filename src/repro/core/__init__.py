@@ -1,4 +1,14 @@
 from repro.core.interface import JAXModel, Model, as_jax_callable  # noqa: F401
 from repro.core.pool import ModelPool, ThreadedPool  # noqa: F401
+from repro.core.fabric import (  # noqa: F401
+    CallableBackend,
+    EvaluationFabric,
+    FabricBackend,
+    HTTPBackend,
+    ModelBackend,
+    SPMDBackend,
+    ThreadedBackend,
+    as_backend,
+)
 from repro.core.scheduler import BatchingExecutor  # noqa: F401
 from repro.core.hierarchy import MultilevelModel  # noqa: F401

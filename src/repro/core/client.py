@@ -2,14 +2,20 @@
 
     model = HTTPModel("http://localhost:4242", "forward")
     print(model([[0.0, 10.0]]))
+
+`evaluate_batch` ships N points in one `/EvaluateBatch` round-trip (falling
+back to per-point `/Evaluate` against servers that predate the extension);
+`round_trips` counts HTTP requests so benchmarks can report the saving.
 """
 from __future__ import annotations
 
 import json
 import urllib.request
 
+import numpy as np
+
 from repro.core.interface import Model
-from repro.core.protocol import ModelSupport
+from repro.core.protocol import ModelSupport, config_key, error_body, split_blocks
 
 
 def _post(url: str, path: str, body: dict, timeout: float = 60.0) -> dict:
@@ -23,7 +29,15 @@ def _post(url: str, path: str, body: dict, timeout: float = 60.0) -> dict:
         with urllib.request.urlopen(req, timeout=timeout) as resp:
             out = json.loads(resp.read())
     except urllib.error.HTTPError as e:
-        out = json.loads(e.read() or b"{}")
+        try:
+            out = json.loads(e.read() or b"")
+        except (json.JSONDecodeError, ValueError):
+            out = {}
+        if "error" not in out:
+            # servers outside this repo answer unknown routes with plain 404
+            # pages; normalize so callers can branch on the error type
+            kind = "NotFound" if e.code == 404 else "HTTPError"
+            out = error_body(kind, f"HTTP {e.code} on {path}")
     if "error" in out:
         raise RuntimeError(f"{out['error'].get('type')}: {out['error'].get('message')}")
     return out
@@ -39,14 +53,21 @@ class HTTPModel(Model):
         super().__init__(name)
         self.url = url
         self.timeout = timeout
-        info = _post(url, "/ModelInfo", {"name": name}, timeout=10.0)
+        self.round_trips = 0  # HTTP requests issued (telemetry)
+        self._batch_supported: bool | None = None  # probed on first use
+        self._sizes_cache: dict = {}  # config_key -> input sizes (static per config)
+        info = self._rpc("/ModelInfo", {"name": name}, timeout=10.0)
         self._support = ModelSupport.from_json(info.get("support", {}))
 
+    def _rpc(self, path: str, body: dict, timeout: float | None = None) -> dict:
+        self.round_trips += 1
+        return _post(self.url, path, body, timeout or self.timeout)
+
     def get_input_sizes(self, config=None):
-        return _post(self.url, "/InputSizes", {"name": self.name, "config": config or {}})["inputSizes"]
+        return self._rpc("/InputSizes", {"name": self.name, "config": config or {}})["inputSizes"]
 
     def get_output_sizes(self, config=None):
-        return _post(self.url, "/OutputSizes", {"name": self.name, "config": config or {}})["outputSizes"]
+        return self._rpc("/OutputSizes", {"name": self.name, "config": config or {}})["outputSizes"]
 
     def supports_evaluate(self):
         return self._support.evaluate
@@ -62,7 +83,38 @@ class HTTPModel(Model):
 
     def __call__(self, parameters, config=None):
         body = {"name": self.name, "input": [list(map(float, p)) for p in parameters], "config": config or {}}
-        return _post(self.url, "/Evaluate", body, self.timeout)["output"]
+        return self._rpc("/Evaluate", body)["output"]
+
+    def evaluate_batch(self, thetas, config=None) -> np.ndarray:
+        """[N, n] -> [N, m] in ONE `/EvaluateBatch` round-trip (vs N for the
+        per-point path); transparently falls back against protocol-1.0
+        servers that do not know the endpoint."""
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        if self._batch_supported is not False:
+            body = {
+                "name": self.name,
+                "inputs": [list(map(float, t)) for t in thetas],
+                "config": config or {},
+            }
+            try:
+                out = self._rpc("/EvaluateBatch", body)
+                self._batch_supported = True
+                return np.asarray(out["outputs"], float)
+            except RuntimeError as e:
+                if not any(k in str(e) for k in ("NotFound", "UnsupportedFeature")):
+                    raise
+                self._batch_supported = False
+        # per-point fallback: un-flatten each theta into the model's input
+        # blocks (mirrors the server-side /EvaluateBatch splitting)
+        ck = config_key(config)
+        if ck not in self._sizes_cache:
+            self._sizes_cache[ck] = self.get_input_sizes(config)
+        sizes = self._sizes_cache[ck]
+        rows = []
+        for t in thetas:
+            out = self(split_blocks(t, sizes), config)
+            rows.append(np.concatenate([np.asarray(blk, float) for blk in out]))
+        return np.asarray(rows)
 
     def gradient(self, out_wrt, in_wrt, parameters, sens, config=None):
         body = {
@@ -70,7 +122,7 @@ class HTTPModel(Model):
             "input": [list(map(float, p)) for p in parameters],
             "sens": list(map(float, sens)), "config": config or {},
         }
-        return _post(self.url, "/Gradient", body, self.timeout)["output"]
+        return self._rpc("/Gradient", body)["output"]
 
     def apply_jacobian(self, out_wrt, in_wrt, parameters, vec, config=None):
         body = {
@@ -78,7 +130,7 @@ class HTTPModel(Model):
             "input": [list(map(float, p)) for p in parameters],
             "vec": list(map(float, vec)), "config": config or {},
         }
-        return _post(self.url, "/ApplyJacobian", body, self.timeout)["output"]
+        return self._rpc("/ApplyJacobian", body)["output"]
 
     def apply_hessian(self, out_wrt, in_wrt1, in_wrt2, parameters, sens, vec, config=None):
         body = {
@@ -87,4 +139,4 @@ class HTTPModel(Model):
             "sens": list(map(float, sens)), "vec": list(map(float, vec)),
             "config": config or {},
         }
-        return _post(self.url, "/ApplyHessian", body, self.timeout)["output"]
+        return self._rpc("/ApplyHessian", body)["output"]

@@ -1,0 +1,523 @@
+"""EvaluationFabric — ONE dispatch layer between UQ drivers and model pools.
+
+The paper's architecture (§3) puts a load balancer between prototype-grade UQ
+code and a cluster of model instances so that the UQ side stays oblivious to
+where and how evaluations run. This repo historically had three uncoordinated
+evaluation paths (SPMD `ModelPool`, HAProxy-style `ThreadedPool`, per-point
+`BatchingExecutor`) that every driver wired up by hand. The fabric unifies
+them behind one async-capable API:
+
+    fabric = EvaluationFabric(backend)      # pool / model / url(s) / callable
+    fut  = fabric.submit(theta, config)     # per-point, batched transparently
+    ys   = fabric.evaluate_batch(thetas, config)  # vectorized fast path
+
+with
+
+  * pluggable backends — SPMD `ModelPool`, `ThreadedPool`, `HTTPModel`
+    fan-out over several servers (one `/EvaluateBatch` round-trip each),
+    any UM-Bridge `Model`, or a plain batched callable;
+  * adaptive batching — per-point submits are packed into waves; the linger
+    window and max wave size self-tune from observed wave latency;
+  * an LRU result cache keyed on `(theta.tobytes(), config)` — dedupes the
+    repeated coarse-level evaluations MLDA/DA subchains generate, and
+    coalesces identical in-flight requests into one backend call;
+  * per-backend telemetry — waves, points, padding waste, busy fraction,
+    cache hits — so benchmarks can report the paper's efficiency numbers.
+
+Every UQ driver (`run_chains`, `mlda`, `cub_qmc_sobol`, sparse grids) accepts
+a fabric wherever it accepted a bare callable.
+"""
+from __future__ import annotations
+
+import inspect
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.interface import JAXModel, Model
+from repro.core.pool import ModelPool, ThreadedPool
+from repro.core.protocol import config_key, split_blocks
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+
+class FabricBackend:
+    """A batched evaluation target: [N, n] -> [N, m] under one config."""
+
+    name = "backend"
+    n_instances = 1
+
+    def evaluate(self, thetas: np.ndarray, config: dict | None) -> np.ndarray:
+        raise NotImplementedError
+
+    def stats(self) -> dict:
+        return {}
+
+    def close(self):
+        pass
+
+
+class CallableBackend(FabricBackend):
+    """Wraps a plain batched callable f([N, n]) -> [N, m] (config-aware if it
+    takes a second positional argument)."""
+
+    name = "callable"
+
+    def __init__(self, fn: Callable, n_instances: int = 1):
+        self.fn = fn
+        self.n_instances = n_instances
+        try:
+            params = list(inspect.signature(fn).parameters.values())
+            positional = [
+                p for p in params
+                if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+            ]
+            # pass config only when the callable asks for it: a second
+            # REQUIRED positional, one literally named 'config', or *args —
+            # defaulted params like `scale=1.0` must not silently receive it
+            required = [p for p in positional if p.default is p.empty]
+            self._takes_config = (
+                len(required) >= 2
+                or any(p.name == "config" for p in positional[1:])
+                or any(p.kind == p.VAR_POSITIONAL for p in params)
+            )
+        except (TypeError, ValueError):
+            self._takes_config = False
+        self._calls = 0
+
+    def evaluate(self, thetas, config):
+        self._calls += 1
+        out = self.fn(thetas, config) if self._takes_config else self.fn(thetas)
+        return np.atleast_2d(np.asarray(out))
+
+    def stats(self):
+        return {"kind": self.name, "calls": self._calls}
+
+
+class SPMDBackend(FabricBackend):
+    """The TPU/SPMD path: one `ModelPool` wave per fabric wave."""
+
+    name = "spmd"
+
+    def __init__(self, pool: ModelPool):
+        self.pool = pool
+        self.n_instances = pool.n_instances
+
+    def evaluate(self, thetas, config):
+        return self.pool.evaluate(thetas, config)
+
+    def stats(self):
+        s = dict(self.pool.stats)
+        s["kind"] = self.name
+        return s
+
+
+class ThreadedBackend(FabricBackend):
+    """The host-side HAProxy path: per-point dispatch to N worker threads."""
+
+    name = "threaded"
+
+    def __init__(self, pool: ThreadedPool):
+        self.pool = pool
+        self.n_instances = len(pool.instances)
+
+    def evaluate(self, thetas, config):
+        return self.pool.evaluate(thetas, config)
+
+    def stats(self):
+        s = {k: v for k, v in self.pool.stats.items() if k != "busy_s"}
+        busy = self.pool.stats.get("busy_s", [])
+        s["busy_s"] = round(float(np.sum(busy)), 4)
+        s["kind"] = self.name
+        return s
+
+    def close(self):
+        self.pool.shutdown()
+
+
+class ModelBackend(FabricBackend):
+    """Any UM-Bridge `Model` — uses `evaluate_batch` when the model has one
+    (JAXModel vmap path, HTTPModel single `/EvaluateBatch` round-trip),
+    otherwise falls back to one `__call__` per point."""
+
+    name = "model"
+
+    def __init__(self, model: Model):
+        self.model = model
+
+    def evaluate(self, thetas, config):
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        if hasattr(self.model, "evaluate_batch"):
+            return np.atleast_2d(np.asarray(self.model.evaluate_batch(thetas, config)))
+        # per-point fallback: un-flatten each theta into the model's input
+        # blocks and re-flatten all output blocks (multi-block models)
+        sizes = self.model.get_input_sizes(config)
+        rows = []
+        for t in thetas:
+            out = self.model(split_blocks(t, sizes), config)
+            rows.append(np.concatenate([np.asarray(blk, float).ravel() for blk in out]))
+        return np.asarray(rows)
+
+    def stats(self):
+        s = {"kind": self.name, "model": getattr(self.model, "name", "?")}
+        rt = getattr(self.model, "round_trips", None)
+        if rt is not None:
+            s["round_trips"] = rt
+        return s
+
+
+class HTTPBackend(FabricBackend):
+    """Fan a wave out over several UM-Bridge servers: the batch is split into
+    contiguous chunks, one `/EvaluateBatch` round-trip per server (the
+    paper's k8s replicas, minus one round-trip per *point*)."""
+
+    name = "http"
+
+    def __init__(self, clients: Sequence):
+        from repro.core.client import HTTPModel
+
+        self.clients = [
+            c if isinstance(c, Model) else HTTPModel(str(c)) for c in clients
+        ]
+        self.n_instances = len(self.clients)
+        self._ex = ThreadPoolExecutor(max_workers=self.n_instances)
+
+    def evaluate(self, thetas, config):
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        k = min(self.n_instances, len(thetas))
+        chunks = np.array_split(np.arange(len(thetas)), k)
+        futs = [
+            self._ex.submit(self.clients[i].evaluate_batch, thetas[idx], config)
+            for i, idx in enumerate(chunks)
+        ]
+        return np.concatenate([np.atleast_2d(f.result()) for f in futs], axis=0)
+
+    def stats(self):
+        return {
+            "kind": self.name,
+            "round_trips": int(
+                sum(getattr(c, "round_trips", 0) for c in self.clients)
+            ),
+        }
+
+    def close(self):
+        self._ex.shutdown(wait=False)
+
+
+def as_backend(obj) -> FabricBackend:
+    """Coerce pools / models / urls / callables into a FabricBackend."""
+    if isinstance(obj, FabricBackend):
+        return obj
+    if isinstance(obj, ModelPool):
+        return SPMDBackend(obj)
+    if isinstance(obj, ThreadedPool):
+        return ThreadedBackend(obj)
+    if isinstance(obj, JAXModel):
+        return SPMDBackend(ModelPool(obj))
+    if isinstance(obj, Model):
+        return ModelBackend(obj)
+    if isinstance(obj, str):
+        return HTTPBackend([obj])
+    if isinstance(obj, (list, tuple)):
+        from repro.core.client import HTTPModel
+
+        if all(isinstance(o, (str, HTTPModel)) for o in obj):
+            return HTTPBackend(obj)
+        return ThreadedBackend(ThreadedPool(list(obj)))
+    if callable(obj):
+        return CallableBackend(obj)
+    raise TypeError(f"cannot build a fabric backend from {type(obj).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# The fabric
+# ---------------------------------------------------------------------------
+
+
+def _derived_future(src: Future) -> Future:
+    """A Future resolving to an independent copy of `src`'s result, so
+    coalesced callers never share (and can freely mutate) one array."""
+    dst: Future = Future()
+
+    def _copy(f: Future):
+        if f.cancelled():
+            dst.cancel()
+        elif f.exception() is not None:
+            dst.set_exception(f.exception())
+        else:
+            dst.set_result(np.array(f.result()))
+
+    src.add_done_callback(_copy)
+    return dst
+
+
+class EvaluationFabric:
+    """Unified async evaluation layer (see module docstring).
+
+    Parameters
+    ----------
+    backend : anything `as_backend` accepts.
+    max_batch : initial wave-size cap for the submit path (adapts upward when
+        waves saturate; default 4 x backend instances).
+    linger_s : initial collector linger window (self-tunes when adaptive).
+    adaptive : tune linger/max_batch from the observed wave latency.
+    cache_size : LRU entries; 0 disables result caching (in-flight request
+        coalescing stays on).
+    """
+
+    def __init__(
+        self,
+        backend,
+        *,
+        max_batch: int | None = None,
+        linger_s: float = 0.002,
+        adaptive: bool = True,
+        cache_size: int = 4096,
+    ):
+        self.backend = as_backend(backend)
+        self.max_batch = int(max_batch or max(4 * self.backend.n_instances, 8))
+        self._max_batch_cap = 4096
+        self.linger_s = float(linger_s)
+        self.adaptive = adaptive
+        self.cache_size = int(cache_size)
+        self._cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        self._inflight: dict[tuple, Future] = {}
+        self._lock = threading.Condition()
+        self._pending: list[tuple[np.ndarray, dict | None, Future, tuple]] = []
+        self._stop = False
+        self._wave_latency_ewma: float | None = None
+        self.stats = {
+            "waves": 0,
+            "points": 0,
+            "cache_hits": 0,
+            "cache_misses": 0,
+            "coalesced": 0,
+            "direct_batches": 0,
+        }
+        self._thread = threading.Thread(target=self._collector, daemon=True)
+        self._thread.start()
+
+    # -- cache --------------------------------------------------------------
+    def _key(self, theta: np.ndarray, config: dict | None) -> tuple:
+        return (theta.tobytes(), theta.size, config_key(config))
+
+    def _cache_get(self, key):  # caller holds the lock
+        if not self.cache_size:
+            return None
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+        return hit
+
+    def _cache_put(self, key, value):  # caller holds the lock
+        if not self.cache_size:
+            return
+        # defensive copy: result arrays are handed to callers, who may
+        # mutate them in place — the cached value must not alias them
+        self._cache[key] = np.array(value)
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    # -- per-point API -------------------------------------------------------
+    def submit(self, theta, config: dict | None = None) -> Future:
+        """Single-point evaluation future; transparently batched into waves,
+        deduped against the cache and identical in-flight requests."""
+        theta = np.asarray(theta, float).ravel()
+        key = self._key(theta, config)
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("fabric is shut down")
+            hit = self._cache_get(key)
+            if hit is not None:
+                self.stats["cache_hits"] += 1
+                fut: Future = Future()
+                fut.set_result(hit.copy())
+                return fut
+            inflight = self._inflight.get(key)
+            if inflight is not None:
+                self.stats["coalesced"] += 1
+                return _derived_future(inflight)
+            self.stats["cache_misses"] += 1
+            fut = Future()
+            self._inflight[key] = fut
+            self._pending.append((theta, config, fut, key))
+            self._lock.notify()
+        return fut
+
+    def as_callable(self, config: dict | None = None) -> Callable:
+        """theta -> output row view (what prototype-grade UQ code calls);
+        concurrent callers coalesce into shared waves."""
+
+        def f(theta):
+            return self.submit(theta, config).result()
+
+        return f
+
+    # -- batched API ---------------------------------------------------------
+    def evaluate_batch(self, thetas, config: dict | None = None) -> np.ndarray:
+        """[N, n] -> [N, m] in ONE backend dispatch (bypasses the collector —
+        an explicit batch is already a wave), deduping repeated rows and
+        cache hits first."""
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        N = len(thetas)
+        keys = [self._key(t, config) for t in thetas]
+        rows: list[np.ndarray | None] = [None] * N
+        miss_order: list[tuple] = []
+        miss_rows: dict[tuple, int] = {}
+        miss_thetas: list[np.ndarray] = []
+        wait_futs: dict[tuple, Future] = {}
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("fabric is shut down")
+            for i, key in enumerate(keys):
+                hit = self._cache_get(key)
+                if hit is not None:
+                    self.stats["cache_hits"] += 1
+                    rows[i] = hit
+                    continue
+                if key in miss_rows:
+                    self.stats["cache_hits"] += 1  # intra-batch duplicate
+                    continue
+                inflight = self._inflight.get(key)
+                if inflight is not None:
+                    self.stats["coalesced"] += 1
+                    wait_futs[key] = inflight
+                    continue
+                self.stats["cache_misses"] += 1
+                miss_rows[key] = len(miss_order)
+                miss_order.append(key)
+                miss_thetas.append(thetas[i])
+                self._inflight[key] = Future()
+        outs = None
+        if miss_order:
+            try:
+                outs = np.atleast_2d(
+                    np.asarray(self.backend.evaluate(np.stack(miss_thetas), config))
+                )
+                if outs.shape[0] != len(miss_order):
+                    outs = outs.T
+            except Exception as e:
+                with self._lock:
+                    for k in miss_order:
+                        fut = self._inflight.pop(k, None)
+                        if fut is not None and not fut.done():
+                            fut.set_exception(e)
+                raise
+            with self._lock:
+                self.stats["waves"] += 1
+                self.stats["points"] += len(miss_order)
+                self.stats["direct_batches"] += 1
+                for k, out in zip(miss_order, outs):
+                    self._cache_put(k, out)
+                    fut = self._inflight.pop(k, None)
+                    if fut is not None and not fut.done():
+                        fut.set_result(out)
+        for i, key in enumerate(keys):
+            if rows[i] is None:
+                if key in miss_rows:
+                    rows[i] = outs[miss_rows[key]]
+                elif key in wait_futs:
+                    rows[i] = np.asarray(wait_futs[key].result())
+        return np.stack([np.asarray(r).ravel() for r in rows])
+
+    evaluate = evaluate_batch
+    __call__ = evaluate_batch
+
+    # -- collector (submit path) --------------------------------------------
+    def _collector(self):
+        while True:
+            with self._lock:
+                while not self._pending and not self._stop:
+                    self._lock.wait(timeout=0.05)
+                if self._stop and not self._pending:
+                    return
+                t_first = time.monotonic()
+                while (
+                    len(self._pending) < self.max_batch
+                    and time.monotonic() - t_first < self.linger_s
+                ):
+                    self._lock.wait(timeout=self.linger_s)
+                batch = self._pending[: self.max_batch]
+                self._pending = self._pending[self.max_batch :]
+            if not batch:
+                continue
+            # one backend call per distinct config in the wave
+            groups: dict[tuple, list] = {}
+            for item in batch:
+                groups.setdefault(config_key(item[1]), []).append(item)
+            t0 = time.monotonic()
+            for items in groups.values():
+                stack = np.stack([it[0] for it in items])
+                try:
+                    outs = np.atleast_2d(
+                        np.asarray(self.backend.evaluate(stack, items[0][1]))
+                    )
+                    if outs.shape[0] != len(items):
+                        outs = outs.T
+                    with self._lock:
+                        for (_, _, fut, key), out in zip(items, outs):
+                            self._cache_put(key, out)
+                            self._inflight.pop(key, None)
+                            if not fut.done():
+                                fut.set_result(out)
+                except Exception as e:  # noqa: BLE001
+                    with self._lock:
+                        for _, _, fut, key in items:
+                            self._inflight.pop(key, None)
+                            if not fut.done():
+                                fut.set_exception(e)
+            with self._lock:
+                self.stats["waves"] += 1
+                self.stats["points"] += len(batch)
+            self._tune(len(batch), time.monotonic() - t0)
+
+    def _tune(self, wave_size: int, wave_latency: float):
+        """Self-tune linger/max_batch from observed wave latency: linger a
+        small fraction of how long a wave takes (waiting costs little when
+        waves are slow, a lot when they are fast), and grow the wave cap
+        whenever submits saturate it."""
+        if not self.adaptive:
+            return
+        e = self._wave_latency_ewma
+        self._wave_latency_ewma = wave_latency if e is None else 0.7 * e + 0.3 * wave_latency
+        self.linger_s = float(np.clip(0.25 * self._wave_latency_ewma, 2e-4, 0.05))
+        if wave_size >= self.max_batch and self.max_batch < self._max_batch_cap:
+            self.max_batch = min(2 * self.max_batch, self._max_batch_cap)
+
+    # -- telemetry / lifecycle ----------------------------------------------
+    def telemetry(self) -> dict:
+        s = dict(self.stats)
+        looked_up = s["cache_hits"] + s["cache_misses"]
+        s["cache_hit_rate"] = s["cache_hits"] / looked_up if looked_up else 0.0
+        s["mean_wave_size"] = s["points"] / s["waves"] if s["waves"] else 0.0
+        s["max_batch"] = self.max_batch
+        s["linger_s"] = round(self.linger_s, 5)
+        s["backend"] = self.backend.stats()
+        back = s["backend"]
+        if "padded" in back and s["points"]:
+            s["padding_waste"] = back["padded"] / (back["padded"] + s["points"])
+        if "busy_s" in back and back.get("evaluations"):
+            n_inst = max(1, self.backend.n_instances)
+            s["busy_fraction_hint"] = back["busy_s"] / n_inst
+        return s
+
+    def shutdown(self):
+        with self._lock:
+            self._stop = True
+            self._lock.notify_all()
+        self._thread.join(timeout=2.0)
+        self.backend.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interface import JAXModel, Model
+from repro.core.protocol import config_key
 
 
 # ---------------------------------------------------------------------------
@@ -55,11 +56,12 @@ class ModelPool:
             self.n_instances = max(len(jax.devices()), 1)
         self.stats = {"batches": 0, "evaluations": 0, "padded": 0}
 
-    def _dispatch_fn(self):
-        key = "dispatch"
+    def _dispatch_fn(self, config: dict | None = None):
+        config = self.config if config is None else config
+        key = config_key(config)
         if key in self._jit_cache:
             return self._jit_cache[key]
-        fn = self.model._cfg_fn(self.config)
+        fn = self.model._cfg_fn(config)
         vfn = jax.vmap(fn)
         if self.ctx is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
@@ -72,17 +74,20 @@ class ModelPool:
         self._jit_cache[key] = jfn
         return jfn
 
-    def evaluate(self, thetas: np.ndarray) -> np.ndarray:
+    def evaluate(self, thetas: np.ndarray, config: dict | None = None) -> np.ndarray:
         """[N, n] -> [N, m]: pad to instance multiple, one SPMD dispatch per
         wave. This is what the load balancer + k8s replicas do in the paper,
         minus the HTTP."""
-        thetas = np.atleast_2d(np.asarray(thetas, np.float32))
+        # honor x64 like JAXModel.__call__ does, so the SPMD and HTTP paths
+        # return identical precision for the same model
+        dtype = np.float64 if jax.config.x64_enabled else np.float32
+        thetas = np.atleast_2d(np.asarray(thetas, dtype))
         N = len(thetas)
         k = self.n_instances
         pad = (-N) % k
         if pad:
             thetas = np.concatenate([thetas, np.repeat(thetas[-1:], pad, 0)], 0)
-        fn = self._dispatch_fn()
+        fn = self._dispatch_fn(config)
         x = jnp.asarray(thetas)
         if self.ctx is not None:
             with self.ctx.mesh:
@@ -112,6 +117,15 @@ class _Request:
     future: Future
     deadline: float | None = None
     attempts: int = 0
+    # speculative re-dispatch puts the SAME request on two workers; the
+    # attempts budget check must be atomic across them
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def consume_attempt(self, budget: int) -> bool:
+        """Count one failed attempt; True while retries remain."""
+        with self.lock:
+            self.attempts += 1
+            return self.attempts <= budget
 
 
 class ThreadedPool:
@@ -166,8 +180,7 @@ class ThreadedPool:
                     req.future.set_result(np.asarray(out[0]))
                 self.stats["evaluations"] += 1
             except Exception as e:  # noqa: BLE001 — instance failure
-                req.attempts += 1
-                if req.attempts <= self.max_retries:
+                if req.consume_attempt(self.max_retries):
                     self.stats["retries"] += 1
                     self._q.put(req)
                 elif not req.future.done():
@@ -185,10 +198,16 @@ class ThreadedPool:
             def respawn():
                 if not fut.done():
                     self.stats["respawns"] += 1
-                    self._q.put(_Request(req.theta, req.config, fut))
+                    # re-queue the SAME request object: the duplicate shares
+                    # the attempts counter, so speculation does not silently
+                    # double the retry budget
+                    self._q.put(req)
             timer = threading.Timer(self.deadline_s, respawn)
             timer.daemon = True
             timer.start()
+            # don't leak a live timer thread per request until the deadline:
+            # cancel as soon as the future resolves
+            fut.add_done_callback(lambda _f: timer.cancel())
         return fut
 
     def evaluate(self, thetas, config: dict | None = None) -> np.ndarray:

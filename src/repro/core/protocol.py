@@ -6,6 +6,11 @@ Endpoints (protocol version 1.0):
   POST /OutputSizes          {"name", "config"}        -> {"outputSizes": [..]}
   POST /ModelInfo            {"name"}                  -> {"support": {...}}
   POST /Evaluate             {"name", "input", "config"} -> {"output": [[..]]}
+  POST /EvaluateBatch        {"name", "inputs": [[..], ..], "config"}
+                             -> {"outputs": [[..], ..]}
+                             (batched extension: each entry of "inputs" is ONE
+                             evaluation point, its blocks flattened; N points
+                             per round-trip instead of one)
   POST /Gradient             {"name", "outWrt", "inWrt", "input", "sens", "config"}
   POST /ApplyJacobian        {"name", "outWrt", "inWrt", "input", "vec", "config"}
   POST /ApplyHessian         {"name", "outWrt", "inWrt1", "inWrt2", "input", "sens", "vec", "config"}
@@ -18,6 +23,13 @@ from dataclasses import dataclass, field
 from typing import Any
 
 PROTOCOL_VERSION = 1.0
+
+
+def config_key(config: dict | None) -> tuple:
+    """Canonical hashable view of an UM-Bridge config dict (shared by the
+    fabric result cache and the pool jit cache — the two must agree on what
+    makes two configs 'the same')."""
+    return tuple(sorted((k, repr(v)) for k, v in (config or {}).items()))
 
 
 @dataclass
@@ -47,6 +59,29 @@ class ModelSupport:
 
 def error_body(kind: str, message: str) -> dict:
     return {"error": {"type": kind, "message": message}}
+
+
+def split_blocks(vec, input_sizes: list[int]) -> list[list[float]]:
+    """Un-flatten one evaluation point into the model's input blocks (the
+    layout contract shared by /EvaluateBatch server, client fallback and
+    ModelBackend fallback)."""
+    blocks, ofs = [], 0
+    for n in input_sizes:
+        blocks.append([float(v) for v in vec[ofs : ofs + n]])
+        ofs += n
+    return blocks
+
+
+def validate_evaluate_batch_request(body: dict, input_sizes: list[int]) -> str | None:
+    inputs = body.get("inputs")
+    if not isinstance(inputs, list) or not inputs:
+        return "expected a nonempty 'inputs' list of evaluation points"
+    n = sum(input_sizes)
+    for i, vec in enumerate(inputs):
+        if not isinstance(vec, list) or len(vec) != n:
+            got = len(vec) if isinstance(vec, list) else type(vec).__name__
+            return f"inputs[{i}]: got {got}, want {n} values (flattened blocks)"
+    return None
 
 
 def validate_evaluate_request(body: dict, input_sizes: list[int]) -> str | None:

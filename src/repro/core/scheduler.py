@@ -1,86 +1,39 @@
 """Request batching: per-point `submit()` futures on top of the SPMD pool.
 
-The paper's point (§3.1, §4.1) is that *prototype-grade, thread-parallel UQ
-code* — Matlab parfor, Python multiprocessing, 100 chains each requesting one
-evaluation at a time — can transparently drive a cluster. On a TPU mesh the
-efficient unit is a batched SPMD dispatch, so `BatchingExecutor` sits between
-the two: UQ threads submit single points; a collector thread packs everything
-that arrived within `linger_s` (or up to `max_batch`) into one ModelPool wave.
-
-This keeps the sequential-looking UQ code oblivious to the mesh, the exact
-separation of concerns the paper achieves with HAProxy.
+Historically this module owned the collector thread that packed per-point
+submits into SPMD waves. That machinery now lives in
+`repro.core.fabric.EvaluationFabric` (with adaptive linger/wave sizing,
+request coalescing and an optional result cache); `BatchingExecutor` remains
+as the thin, non-caching compatibility view of it — prototype-grade UQ
+threads submit single points, the fabric packs everything that arrives
+within the linger window into one ModelPool wave (paper §3.1, §4.1).
 """
 from __future__ import annotations
 
-import threading
-import time
-from concurrent.futures import Future
-
 import numpy as np
 
+from repro.core.fabric import EvaluationFabric
 from repro.core.pool import ModelPool
 
 
-class BatchingExecutor:
-    def __init__(self, pool: ModelPool, max_batch: int | None = None, linger_s: float = 0.002):
-        self.pool = pool
-        self.max_batch = max_batch or 4 * pool.n_instances
-        self.linger_s = linger_s
-        self._lock = threading.Condition()
-        self._pending: list[tuple[np.ndarray, Future]] = []
-        self._stop = False
-        self._thread = threading.Thread(target=self._loop, daemon=True)
-        self._thread.start()
-        self.stats = {"waves": 0, "points": 0}
+class BatchingExecutor(EvaluationFabric):
+    """Per-point futures over a `ModelPool` — a fixed-window, cache-free
+    `EvaluationFabric` (the paper's §3.1 semantics: transparent batching
+    with no result reuse across waves; identical requests IN FLIGHT at the
+    same moment still share one evaluation)."""
 
-    def submit(self, theta) -> Future:
-        fut: Future = Future()
-        with self._lock:
-            self._pending.append((np.asarray(theta, np.float32).ravel(), fut))
-            self._lock.notify()
-        return fut
+    def __init__(self, pool: ModelPool, max_batch: int | None = None, linger_s: float = 0.002):
+        super().__init__(
+            pool,
+            max_batch=max_batch or 4 * pool.n_instances,
+            linger_s=linger_s,
+            adaptive=False,
+            cache_size=0,
+        )
+        self.pool = pool
 
     def evaluate(self, theta) -> np.ndarray:
+        """Blocking single-point evaluation (legacy signature)."""
         return self.submit(theta).result()
 
     __call__ = evaluate
-
-    def _loop(self):
-        while True:
-            with self._lock:
-                while not self._pending and not self._stop:
-                    self._lock.wait(timeout=0.05)
-                if self._stop and not self._pending:
-                    return
-                t_first = time.monotonic()
-                # linger to let a burst of submissions accumulate
-                while (
-                    len(self._pending) < self.max_batch
-                    and time.monotonic() - t_first < self.linger_s
-                ):
-                    self._lock.wait(timeout=self.linger_s)
-                batch = self._pending[: self.max_batch]
-                self._pending = self._pending[self.max_batch :]
-            thetas = np.stack([b[0] for b in batch])
-            try:
-                outs = self.pool.evaluate(thetas)
-                for (_, fut), out in zip(batch, outs):
-                    fut.set_result(out)
-            except Exception as e:  # noqa: BLE001
-                for _, fut in batch:
-                    if not fut.done():
-                        fut.set_exception(e)
-            self.stats["waves"] += 1
-            self.stats["points"] += len(batch)
-
-    def shutdown(self):
-        with self._lock:
-            self._stop = True
-            self._lock.notify_all()
-        self._thread.join(timeout=2.0)
-
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        self.shutdown()

@@ -1,8 +1,10 @@
-"""UM-Bridge HTTP model server (stdlib only — paper §2.4.2).
+"""UM-Bridge HTTP model server (stdlib http.server — paper §2.4.2).
 
 `serve_models([model], port)` mirrors umbridge.serve_models; the threaded
 variant is used by tests and by `ThreadedPool`-over-HTTP setups to emulate
-the paper's k8s pods on one host.
+the paper's k8s pods on one host. Beyond protocol 1.0 it serves the batched
+`/EvaluateBatch` extension (N points per round-trip) used by the
+EvaluationFabric HTTP backend.
 """
 from __future__ import annotations
 
@@ -10,8 +12,16 @@ import json
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
+import numpy as np
+
 from repro.core.interface import Model
-from repro.core.protocol import PROTOCOL_VERSION, error_body, validate_evaluate_request
+from repro.core.protocol import (
+    PROTOCOL_VERSION,
+    error_body,
+    split_blocks,
+    validate_evaluate_batch_request,
+    validate_evaluate_request,
+)
 
 
 def _make_handler(models: dict[str, Model]):
@@ -68,6 +78,25 @@ def _make_handler(models: dict[str, Model]):
                         return self._send(error_body("InvalidInput", err), 400)
                     out = model(body["input"], config)
                     return self._send({"output": [list(map(float, v)) for v in out]})
+                if self.path == "/EvaluateBatch":
+                    if not model.supports_evaluate():
+                        return self._send(error_body("UnsupportedFeature", "Evaluate"), 400)
+                    sizes = model.get_input_sizes(config)
+                    err = validate_evaluate_batch_request(body, sizes)
+                    if err:
+                        return self._send(error_body("InvalidInput", err), 400)
+                    inputs = body["inputs"]
+                    if hasattr(model, "evaluate_batch") and len(sizes) == 1:
+                        outs = np.atleast_2d(
+                            model.evaluate_batch(np.asarray(inputs, float), config)
+                        )
+                        outputs = [list(map(float, row)) for row in outs]
+                    else:
+                        outputs = []
+                        for vec in inputs:
+                            out = model(split_blocks(vec, sizes), config)
+                            outputs.append([float(v) for blk in out for v in blk])
+                    return self._send({"outputs": outputs})
                 if self.path == "/Gradient":
                     out = model.gradient(
                         body["outWrt"], body["inWrt"], body["input"], body["sens"], config

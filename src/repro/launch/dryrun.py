@@ -206,6 +206,9 @@ def run_cell(arch: str, shape_name: str, mesh, *, reduced=False, save_hlo=None, 
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    # jax returned [{...}] (one entry per program) before ~0.5, a flat dict after
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
     n_dev = int(np.prod(mesh.devices.shape))
     hlo = compiled.as_text()
     if save_hlo:

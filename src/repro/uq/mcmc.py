@@ -87,12 +87,31 @@ def pcn(
     return ChainResult(samples, lls, acc / n_steps, n_steps + 1)
 
 
-def run_chains(make_chain: Callable[[int], ChainResult], n_chains: int, parallel: bool = True):
-    """n independent chains (paper §4.3: 100 parallel MLDA samplers)."""
+def run_chains(
+    make_chain: Callable,
+    n_chains: int,
+    parallel: bool = True,
+    fabric=None,
+):
+    """n independent chains (paper §4.3: 100 parallel MLDA samplers).
+
+    When `fabric` (an `EvaluationFabric`) is given, `make_chain` is called as
+    `make_chain(i, fabric)` so every chain routes its model evaluations
+    through the shared dispatch layer — concurrent chains then coalesce into
+    batched waves and share the result cache, which is the whole point of
+    running them in threads."""
+    if fabric is not None:
+        import inspect
+
+        if len(inspect.signature(make_chain).parameters) < 2:
+            raise TypeError("with fabric=, make_chain must accept (chain_id, fabric)")
+        chain = lambda i: make_chain(i, fabric)
+    else:
+        chain = make_chain
     if parallel and n_chains > 1:
         with ThreadPoolExecutor(max_workers=n_chains) as ex:
-            return list(ex.map(make_chain, range(n_chains)))
-    return [make_chain(i) for i in range(n_chains)]
+            return list(ex.map(chain, range(n_chains)))
+    return [chain(i) for i in range(n_chains)]
 
 
 # ---------------------------------------------------------------------------

@@ -26,6 +26,41 @@ class MLDAResult:
     evals_per_level: list
 
 
+def fabric_logposts(
+    fabric,
+    loglik: Callable[[np.ndarray], float],
+    level_configs: Sequence[dict | None],
+    logprior: Callable[[np.ndarray], float] | None = None,
+) -> list[Callable]:
+    """Per-level log-posteriors routed through an `EvaluationFabric`.
+
+    `level_configs[l]` is the UM-Bridge config selecting level l (coarsest
+    first, e.g. `{"level": 0}`); `loglik(model_output) -> float` turns the
+    forward-model output into a log likelihood; `logprior(theta)` (optional)
+    short-circuits out-of-support proposals BEFORE any model evaluation.
+
+    Because MLDA subchains re-evaluate the coarse model at repeated states
+    (the subchain start, rejected proposals), routing through the fabric's
+    result cache removes those duplicate evaluations entirely.
+    """
+
+    def make(config):
+        def logpost(theta):
+            lp = 0.0
+            if logprior is not None:
+                lp = float(logprior(theta))
+                if not np.isfinite(lp):
+                    return -np.inf
+            # submit (not evaluate_batch): single points ride the collector,
+            # so concurrent chains pack into shared dispatch waves
+            out = fabric.submit(np.asarray(theta, float), config).result()
+            return lp + float(loglik(out))
+
+        return logpost
+
+    return [make(c) for c in level_configs]
+
+
 class _LevelSampler:
     """Recursive DA sampler for one level."""
 
@@ -76,17 +111,32 @@ class _LevelSampler:
 
 
 def mlda(
-    logposts: Sequence[Callable],
+    logposts: Sequence[Callable] | None,
     x0: np.ndarray,
     n_samples: int,
     subsampling: Sequence[int],
     prop_cov: np.ndarray,
     rng: np.random.Generator,
+    *,
+    fabric=None,
+    level_configs: Sequence[dict | None] | None = None,
+    loglik: Callable | None = None,
+    logprior: Callable | None = None,
 ) -> MLDAResult:
     """Draw n_samples at the finest level with MLDA.
 
     logposts: [coarsest ... finest]; subsampling[l] = subchain length used to
-    generate proposals for level l+1 (paper: (25, 2) for 3 levels)."""
+    generate proposals for level l+1 (paper: (25, 2) for 3 levels).
+
+    Instead of bare logpost callables, the level stack can be given as an
+    `EvaluationFabric` plus `level_configs`/`loglik` (and optional
+    `logprior`) — evaluations then flow through the fabric's batching layer
+    and result cache (see `fabric_logposts`)."""
+    if fabric is not None:
+        assert loglik is not None and level_configs is not None, (
+            "fabric= requires loglik= and level_configs="
+        )
+        logposts = fabric_logposts(fabric, loglik, level_configs, logprior)
     assert len(subsampling) == len(logposts) - 1
     sampler = _LevelSampler(list(logposts), list(subsampling), prop_cov, rng)
     x = np.asarray(x0, float).copy()

@@ -90,6 +90,14 @@ class CubatureResult:
     history: list
 
 
+def _as_batched(f, config: dict | None):
+    """Accept an `EvaluationFabric` (or anything exposing `evaluate_batch`)
+    wherever a bare batched callable was accepted."""
+    if hasattr(f, "evaluate_batch"):
+        return lambda X: f.evaluate_batch(X, config)
+    return f
+
+
 def cub_qmc_sobol(
     f,
     dim: int,
@@ -98,21 +106,34 @@ def cub_qmc_sobol(
     n_max: int = 2**16,
     replications: int = 8,
     seed: int = 7,
+    config: dict | None = None,
 ) -> CubatureResult:
     """Doubling Sobol' cubature of E[f(U)] with replicated scrambles
     (CubQMCSobolG-style): doubles N until the replication CI < abs_tol.
-    `f` maps [N, dim] -> [N, m] (batched — dispatched via a pool)."""
+    `f` maps [N, dim] -> [N, m] (batched — a callable, pool or
+    `EvaluationFabric`; `config` is forwarded to a fabric).
+
+    Each doubling evaluates ONLY the new half of every replication (the
+    Sobol' sequence is extended via `skip` and the per-replication sums are
+    reused) — model evaluations are the expensive resource, and recomputing
+    the first n points on every doubling would exactly double their count.
+    """
+    eval_fn = _as_batched(f, config)
     n = n_init
+    n_done = 0  # points already evaluated per replication
+    sums = None  # [R, m] running sum of f over each replication's points
     history = []
     while True:
-        vals = []
         for r in range(replications):
-            u = sobol(n, dim, scramble_seed=seed + r)
-            y = np.atleast_2d(np.asarray(f(u)))
-            if y.shape[0] != n:
+            u = sobol(n - n_done, dim, scramble_seed=seed + r, skip=n_done)
+            y = np.atleast_2d(np.asarray(eval_fn(u)))
+            if y.shape[0] != n - n_done:
                 y = y.T
-            vals.append(y.mean(axis=0))
-        vals = np.stack(vals)  # [R, m]
+            if sums is None:
+                sums = np.zeros((replications, y.shape[1]))
+            sums[r] += y.sum(axis=0)
+        n_done = n
+        vals = sums / n  # [R, m] replication means
         mean = vals.mean(axis=0)
         se = vals.std(axis=0, ddof=1) / np.sqrt(replications)
         history.append((n * replications, mean.copy(), se.copy()))

@@ -179,9 +179,15 @@ def evaluate_on_sparse_grid(
     Sr: ReducedGrid,
     previous: tuple[ReducedGrid, np.ndarray] | None = None,
     tol: float = 1e-12,
+    config: dict | None = None,
 ) -> np.ndarray:
     """Evaluate f (batched: [N,d] -> [N,m]) on the reduced points, reusing
-    evaluations from a previous (nested) grid — SGMK's recycling feature."""
+    evaluations from a previous (nested) grid — SGMK's recycling feature.
+    `f` may be a bare callable, a pool, or an `EvaluationFabric` (anything
+    exposing `evaluate_batch`; `config` is forwarded to it)."""
+    if hasattr(f, "evaluate_batch"):
+        fab = f
+        f = lambda X: fab.evaluate_batch(X, config)
     pts = Sr.points
     if previous is None:
         return np.atleast_2d(np.asarray(f(pts)))

@@ -1,0 +1,97 @@
+"""Optional `hypothesis` import with a deterministic fallback.
+
+The container does not ship hypothesis, and tier-1 collection must not die on
+the import (seed bug). When hypothesis is available we use it unchanged; when
+it is missing, `given`/`settings`/`st` degrade to a tiny deterministic
+property runner that draws a fixed number of seeded examples per strategy —
+strictly weaker than hypothesis (no shrinking, no edge-case heuristics) but
+it keeps the property tests exercising real code instead of skipping.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _N_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    class _StrategyNamespace:
+        @staticmethod
+        def integers(min_value: int = 0, max_value: int = 1 << 16):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+        @staticmethod
+        def lists(elements: "_Strategy", min_size: int = 0, max_size: int = 8):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+    st = _StrategyNamespace()
+
+    def settings(*_args, **_kw):
+        """No-op stand-in for hypothesis.settings (decorator form only)."""
+
+        def deco(fn):
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        """Run the test once per seeded example; report the failing draw."""
+
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for i in range(_N_EXAMPLES):
+                    rng = np.random.default_rng(1234 + i)
+                    drawn_args = tuple(s.example(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.example(rng) for k, s in kw_strategies.items()}
+                    try:
+                        fn(*args, *drawn_args, **kwargs, **drawn_kw)
+                    except Exception as e:  # noqa: BLE001
+                        raise AssertionError(
+                            f"property failed on example {i}: args={drawn_args} "
+                            f"kwargs={drawn_kw}"
+                        ) from e
+
+            # hide the drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())[len(arg_strategies):]
+            params = [p for p in params if p.name not in kw_strategies]
+            wrapper.__signature__ = sig.replace(parameters=params)
+            return wrapper
+
+        return deco

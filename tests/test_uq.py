@@ -1,7 +1,7 @@
 """UQ method tests: distributions, Sobol, sparse grids, KDE, GP, MCMC, MLDA."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.uq.distributions import Beta, Normal, Triangular, TruncatedNormal, Uniform
 from repro.uq.gp import GP
