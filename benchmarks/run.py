@@ -1,10 +1,13 @@
 """Benchmark harness: one function per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--full]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--json PATH]
 
 Prints a ``name,us_per_call,derived`` CSV line per benchmark (quick mode by
 default so the suite completes in a few minutes on one CPU core; --full runs
-the paper-scale protocols).
+the paper-scale protocols). ``--json PATH`` additionally writes a
+machine-readable ``BENCH_results.json`` — one row per benchmark with
+``name`` / ``us_per_call`` / ``evals_per_sec`` / ``derived`` plus the full
+result payloads — so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -19,18 +22,63 @@ def _csv(name: str, us_per_call: float, derived: str):
     print(f"CSV,{name},{us_per_call:.1f},{derived}")
 
 
+def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
+    """(derived summary string, evals/sec if the benchmark reports one)."""
+    derived, rate = "", None
+    if not out:
+        return derived, rate
+    if name.startswith("weak_scaling"):
+        rows = out["weak_scaling"] if isinstance(out, dict) else out
+        derived = f"min_efficiency={min(r['efficiency'] for r in rows):.3f}"
+        if isinstance(out, dict) and "http_round_trips" in out:
+            rt = out["http_round_trips"]["round_trip_reduction"]
+            derived += f";http_rt_reduction={rt:.1f}x"
+        if isinstance(out, dict) and "lockstep" in out:
+            ls = out["lockstep"]
+            derived += f";lockstep_speedup={ls['speedup']:.1f}x"
+            rate = ls["ensemble_evals_per_sec"]
+    elif name.startswith("batch_eval"):
+        ts = out["tsunami_coarse"]
+        derived = (f"tsunami_batch_speedup={ts['speedup']:.1f}x;"
+                   f"fallback_points={out['fabric']['fallback_points']}")
+        rate = ts["batch_evals_per_sec"]
+    elif name.startswith("sparse_grid"):
+        derived = f"speedup={out['speedup']:.1f};evals={out['total_evals']}"
+    elif name.startswith("qmc"):
+        derived = f"online_speedup={out['online_speedup']:.1f};relerr={out['rom_max_relerr']:.1e}"
+    elif name.startswith("mlda"):
+        derived = f"speedup={out['speedup']:.1f};evals={out['evals_per_level']}"
+        if isinstance(out, dict) and "ensemble" in out:
+            derived += f";ensemble_speedup={out['ensemble']['speedup']:.1f}x"
+            rate = out["ensemble"]["ensemble_evals_per_sec"]
+    elif name == "roofline":
+        fracs = [c["roofline_fraction"] for c in out]
+        derived = f"cells={len(out)};median_frac={sorted(fracs)[len(fracs)//2]:.3f}"
+    return derived, rate
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write machine-readable results (BENCH_results.json)")
     args, _ = ap.parse_known_args()
     quick = not args.full
     results = {}
+    rows = []
 
-    benches = []
-    from benchmarks import mlda_tsunami, qmc_defects, roofline, sparse_grid_l2sea, weak_scaling
+    from benchmarks import (
+        batch_eval,
+        mlda_tsunami,
+        qmc_defects,
+        roofline,
+        sparse_grid_l2sea,
+        weak_scaling,
+    )
 
     benches = [
+        ("batch_eval", batch_eval.main),
         ("weak_scaling_fig5", weak_scaling.main),
         ("sparse_grid_l2sea_sec4.1", sparse_grid_l2sea.main),
         ("qmc_defects_sec4.2", qmc_defects.main),
@@ -45,39 +93,50 @@ def main() -> None:
         try:
             out = fn(quick=quick)
             dt = time.monotonic() - t0
-            derived = ""
-            if name.startswith("weak_scaling") and out:
-                rows = out["weak_scaling"] if isinstance(out, dict) else out
-                derived = f"min_efficiency={min(r['efficiency'] for r in rows):.3f}"
-                if isinstance(out, dict) and "http_round_trips" in out:
-                    rt = out["http_round_trips"]["round_trip_reduction"]
-                    derived += f";http_rt_reduction={rt:.1f}x"
-            elif name.startswith("sparse_grid") and out:
-                derived = f"speedup={out['speedup']:.1f};evals={out['total_evals']}"
-            elif name.startswith("qmc") and out:
-                derived = f"online_speedup={out['online_speedup']:.1f};relerr={out['rom_max_relerr']:.1e}"
-            elif name.startswith("mlda") and out:
-                derived = f"speedup={out['speedup']:.1f};evals={out['evals_per_level']}"
-            elif name == "roofline" and out:
-                fracs = [c["roofline_fraction"] for c in out]
-                derived = f"cells={len(out)};median_frac={sorted(fracs)[len(fracs)//2]:.3f}"
+            derived, rate = _derived_and_rate(name, out)
             results[name] = out
+            rows.append(
+                {
+                    "name": name,
+                    "us_per_call": round(dt * 1e6, 1),
+                    "evals_per_sec": rate,
+                    "derived": derived,
+                }
+            )
             _csv(name, dt * 1e6, derived)
         except Exception as e:  # noqa: BLE001
             _csv(name, -1, f"FAILED:{e!r}")
+            if args.json:
+                _write_json(args.json, quick, rows, results, failed=f"{name}: {e!r}")
             raise
 
     out_file = Path("experiments") / "bench_results.json"
     out_file.parent.mkdir(exist_ok=True)
-
-    def _default(o):
-        try:
-            return float(o)
-        except Exception:  # noqa: BLE001
-            return str(o)
-
-    out_file.write_text(json.dumps(results, indent=1, default=_default))
+    out_file.write_text(json.dumps(results, indent=1, default=_jsonable))
     print(f"\nresults -> {out_file}")
+    if args.json:
+        _write_json(args.json, quick, rows, results)
+        print(f"machine-readable -> {args.json}")
+
+
+def _jsonable(o):
+    try:
+        return float(o)
+    except Exception:  # noqa: BLE001
+        return str(o)
+
+
+def _write_json(path: str, quick: bool, rows: list, results: dict, failed: str | None = None):
+    doc = {
+        "schema": "bench-v1",
+        "created_unix": time.time(),
+        "mode": "quick" if quick else "full",
+        "benchmarks": rows,
+        "results": results,
+    }
+    if failed:
+        doc["failed"] = failed
+    Path(path).write_text(json.dumps(doc, indent=1, default=_jsonable))
 
 
 if __name__ == "__main__":

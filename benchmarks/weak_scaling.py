@@ -19,10 +19,16 @@ import time
 import numpy as np
 
 from repro.core.client import HTTPModel
-from repro.core.fabric import EvaluationFabric, HTTPBackend
-from repro.core.interface import Model
+from repro.core.fabric import EvaluationFabric, HTTPBackend, ModelBackend
+from repro.core.interface import JAXModel, Model
 from repro.core.pool import ThreadedPool
 from repro.core.server import serve_models
+from repro.uq.mcmc import (
+    batched_logpost,
+    ensemble_random_walk_metropolis,
+    random_walk_metropolis,
+    run_chains,
+)
 
 
 class _FixedCostModel(Model):
@@ -130,11 +136,85 @@ def run_http(
     }
 
 
+def _compute_model() -> JAXModel:
+    """Compute-bound synthetic model (an iterated map XLA cannot fold away):
+    per-point cost is real device time, so the lockstep comparison measures
+    dispatch amortization, not sleep arithmetic."""
+    import jax
+    import jax.numpy as jnp
+
+    def fn(th):
+        base = jnp.sum((th - 0.3) ** 2)
+
+        def body(i, z):
+            return 0.999 * z + 0.001 * jnp.cos(i * 0.01 + z)
+
+        return jnp.atleast_1d(jax.lax.fori_loop(0, 800, body, base))
+
+    return JAXModel(fn, n_inputs=2, n_outputs=1)
+
+
+def run_lockstep(n_chains: int = 16, n_steps: int = 50):
+    """K MCMC chains, two dispatch disciplines over the SAME native-batch
+    model: (before) K threads, one fabric submit per proposal — waves only
+    form when the collector happens to catch concurrent chains; (after) the
+    lockstep ensemble sampler — every step is ONE perfectly-filled K-point
+    wave. Reports evals/sec and wave fill for both."""
+    rng = np.random.default_rng(5)
+    x0s = rng.standard_normal((n_chains, 2)) * 0.5
+    cov = 0.6 * np.eye(2)
+    evals = n_chains * (n_steps + 1)
+
+    # -- before: threaded chains, per-point submits --------------------------
+    fabric_pp = EvaluationFabric(ModelBackend(_compute_model()), cache_size=0)
+    fabric_pp.submit(x0s[0]).result()  # warm the jit
+
+    def make_chain(i, fab):
+        lp = lambda th: -0.5 * float(fab.submit(th).result()[0])
+        return random_walk_metropolis(
+            lp, x0s[i], n_steps, cov, np.random.default_rng(100 + i)
+        )
+
+    t0 = time.monotonic()
+    run_chains(make_chain, n_chains, parallel=True, fabric=fabric_pp)
+    wall_pp = time.monotonic() - t0
+    tel_pp = fabric_pp.telemetry()
+    fabric_pp.shutdown()
+
+    # -- after: lockstep ensemble, one wave per step -------------------------
+    fabric_ls = EvaluationFabric(
+        ModelBackend(_compute_model()), cache_size=0, max_batch=n_chains
+    )
+    lp_batch = batched_logpost(fabric_ls, lambda y: -0.5 * float(y[0]))
+    lp_batch(x0s)  # warm the batch jit
+    t0 = time.monotonic()
+    ensemble_random_walk_metropolis(lp_batch, x0s, n_steps, cov, rng)
+    wall_ls = time.monotonic() - t0
+    tel_ls = fabric_ls.telemetry()
+    fabric_ls.shutdown()
+
+    out = {
+        "n_chains": n_chains,
+        "n_steps": n_steps,
+        "threaded_evals_per_sec": round(evals / wall_pp, 1),
+        "ensemble_evals_per_sec": round(evals / wall_ls, 1),
+        "speedup": round(wall_pp / wall_ls, 2),
+        "threaded_wave_fill": round(tel_pp["mean_wave_size"] / n_chains, 3),
+        "ensemble_wave_fill": round(tel_ls["mean_wave_size"] / n_chains, 3),
+    }
+    print(f"lockstep ensemble vs {n_chains} threaded chains ({evals} evals): "
+          f"{out['threaded_evals_per_sec']}/s (wave fill "
+          f"{out['threaded_wave_fill']:.0%}) -> {out['ensemble_evals_per_sec']}/s "
+          f"(fill {out['ensemble_wave_fill']:.0%}), {out['speedup']}x")
+    return out
+
+
 def main(quick: bool = False):
     counts = (1, 2, 4, 8, 16) if quick else (1, 2, 4, 8, 16, 32, 64)
     rows = run(eval_cost_s=0.05 if quick else 0.1, counts=counts)
     http = run_http(n_servers=2 if quick else 4, n_points=32 if quick else 64)
-    return {"weak_scaling": rows, "http_round_trips": http}
+    lockstep = run_lockstep(n_chains=8 if quick else 16, n_steps=30 if quick else 50)
+    return {"weak_scaling": rows, "http_round_trips": http, "lockstep": lockstep}
 
 
 if __name__ == "__main__":

@@ -20,13 +20,13 @@ Reduction factor here: 4416 dof -> ~153 ROM dof (~29x; paper: 58x).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interface import Model
+from repro.core.interface import Model, next_pow2, pad_to_bucket
 
 # grid: nx cells across the width (plies), ny along the length
 NX, NY = 48, 96
@@ -61,6 +61,13 @@ def coefficient_field(theta: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     kx = np.where(mask, kx * DEFECT_SOFTENING, kx)
     ky = np.where(mask, ky * DEFECT_SOFTENING, ky)
     return kx, ky
+
+
+@lru_cache(maxsize=1)
+def _pristine_field() -> tuple[np.ndarray, np.ndarray]:
+    """Pristine (defect off-domain) conductivities, computed once — `online`
+    used to rebuild them on every call just to locate changed cells."""
+    return coefficient_field(np.array([0.0, 0.0, 0.0]))
 
 
 def _harmonic(a, b):
@@ -235,13 +242,14 @@ class CompositeROM:
             cols.append(block)
         return np.concatenate(cols, axis=1)  # [ndof, n_red]
 
-    def online(self, theta: np.ndarray) -> tuple[float, dict]:
-        """Returns (strain_energy, info). Only subdomains intersecting the
-        defect rebuild their spectral basis."""
+    def _defect_system(self, theta: np.ndarray) -> tuple[jax.Array, jax.Array, np.ndarray, list]:
+        """Per-theta ONLINE prep (host side): face coefficients for the
+        defected laminate and the reduced basis B, rebuilding the spectral
+        basis only on subdomains the defect intersects. Returns
+        (fx, fy, B, updated_subdomain_ids)."""
         kx, ky = coefficient_field(theta)
         fx, fy = _face_coeffs(jnp.asarray(kx), jnp.asarray(ky))
-        # which subdomains does the defect touch?
-        kx0, ky0 = coefficient_field(np.array([0.0, 0.0, 0.0]))
+        kx0, ky0 = _pristine_field()
         changed_cells = np.argwhere((kx != kx0) | (ky != ky0))
         updated = []
         bases = list(self.local_bases)
@@ -257,7 +265,12 @@ class CompositeROM:
             if inx.any():
                 bases[si] = _local_basis(fx, fy, slc)
                 updated.append(si)
-        B = self._assemble_B(bases)
+        return fx, fy, self._assemble_B(bases), updated
+
+    def online(self, theta: np.ndarray) -> tuple[float, dict]:
+        """Returns (strain_energy, info). Only subdomains intersecting the
+        defect rebuild their spectral basis."""
+        fx, fy, B, updated = self._defect_system(theta)
         # Galerkin projection (matrix-free K applications on the basis)
         Bj = jnp.asarray(B)
         nred = B.shape[1]
@@ -281,9 +294,49 @@ class CompositeROM:
         return float(ex + ey), {"updated_subdomains": updated, "n_red": nred}
 
 
+@jax.jit
+def _rom_energy_batch(fx: jax.Array, fy: jax.Array, B: jax.Array) -> jax.Array:
+    """Batched ONLINE solve: [K, ...] face coefficients + [K, ndof, nred]
+    reduced bases -> [K] strain energies in ONE jitted program. The Galerkin
+    projection (nred matrix-free stencil applications), the dense ROM solve
+    and the energy reduction all stay on-device; only [K] floats leave."""
+
+    def one(fx, fy, B):
+        def kcol(c):
+            return _apply_K(fx, fy, c.reshape(_INTERIOR)).ravel()
+
+        KB = jax.vmap(kcol, in_axes=1, out_axes=1)(B)  # [ndof, nred]
+        Khat = B.T @ KB
+        u0 = _lifting()
+        rhs = _rhs_from_lifting(fx, fy, u0).ravel()
+        fhat = B.T @ rhs
+        c = jnp.linalg.solve(Khat + 1e-10 * jnp.eye(B.shape[1], dtype=B.dtype), fhat)
+        w = (B @ c).reshape(_INTERIOR)
+        u = u0.at[1:-1, :].add(w)
+        ey = 0.5 * jnp.sum(fy * (u[:, 1:] - u[:, :-1]) ** 2)
+        ex = 0.5 * jnp.sum(fx * (u[1:, :] - u[:-1, :]) ** 2)
+        return ex + ey
+
+    return jax.vmap(one)(fx, fy, B)
+
+
+@jax.jit
+def _full_energy_batch(kx: jax.Array, ky: jax.Array) -> jax.Array:
+    """Batched FULL solve: vmapped CG over [K] coefficient fields -> [K]
+    strain energies (the batched while_loop runs until every lane's CG has
+    converged)."""
+    return jax.vmap(lambda a, b: solve_full(a, b)[0])(kx, ky)
+
+
 class CompositeModel(Model):
     """UM-Bridge model: theta (3) -> strain energy (1).
     config: {"mode": "rom" (default) | "full"}."""
+
+    #: chunk width for `evaluate_batch` — bounds the [K, ndof, nred] basis
+    #: stack (~3 MB/theta) while keeping the batched matmuls wide
+    BATCH_CHUNK = 16
+    # chunks + pads internally — see Model.batch_bucket
+    batch_bucket = False
 
     def __init__(self):
         super().__init__("forward")
@@ -299,6 +352,9 @@ class CompositeModel(Model):
     def supports_evaluate(self):
         return True
 
+    def supports_evaluate_batch(self):
+        return True
+
     def __call__(self, parameters, config=None):
         theta = np.asarray(parameters[0], float)
         mode = (config or {}).get("mode", "rom")
@@ -310,3 +366,35 @@ class CompositeModel(Model):
         e, _ = self.rom.online(theta)
         self.stats["rom"] += 1
         return [[e]]
+
+    def evaluate_batch(self, thetas, config=None) -> np.ndarray:
+        """[N, 3] -> [N, 1] through the batched online stage: the per-theta
+        spectral-basis updates stay host-side (they touch only defect-
+        intersecting subdomains), while the Galerkin projections, ROM solves
+        and energy reductions of a whole chunk run as ONE jitted program.
+        Chunks are padded to powers of two (bounded jit cache)."""
+        mode = (config or {}).get("mode", "rom")
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        N = len(thetas)
+        self.stats[mode] += N
+        energies = np.empty(N)
+        for lo in range(0, N, self.BATCH_CHUNK):
+            part = thetas[lo : lo + self.BATCH_CHUNK]
+            if mode == "full":
+                ks = [coefficient_field(t) for t in part]
+                kx = np.stack([k[0] for k in ks])
+                ky = np.stack([k[1] for k in ks])
+                kx, _ = pad_to_bucket(kx, next_pow2(len(part)))
+                ky, _ = pad_to_bucket(ky, next_pow2(len(part)))
+                e = _full_energy_batch(jnp.asarray(kx), jnp.asarray(ky))
+            else:
+                sys = [self.rom._defect_system(t) for t in part]
+                fx = np.stack([np.asarray(s[0]) for s in sys])
+                fy = np.stack([np.asarray(s[1]) for s in sys])
+                B = np.stack([s[2] for s in sys]).astype(np.float32)
+                fx, _ = pad_to_bucket(fx, next_pow2(len(part)))
+                fy, _ = pad_to_bucket(fy, next_pow2(len(part)))
+                B, _ = pad_to_bucket(B, next_pow2(len(part)))
+                e = _rom_energy_batch(jnp.asarray(fx), jnp.asarray(fy), jnp.asarray(B))
+            energies[lo : lo + len(part)] = np.asarray(e, float)[: len(part)]
+        return energies[:, None]

@@ -67,6 +67,14 @@ class L2SeaModel(JAXModel):
             time.sleep(self.eval_cost_s)
         return super().__call__(parameters, config)
 
+    def evaluate_batch(self, thetas, config=None):
+        # a whole wave costs ONE solver latency: the paper's cluster runs
+        # its model instances concurrently, so wall time per wave is the
+        # per-instance cost, not N x it (vs N sleeps on the per-point path)
+        if self.eval_cost_s:
+            time.sleep(self.eval_cost_s)
+        return super().evaluate_batch(thetas, config)
+
 
 def make_inputs(y: np.ndarray) -> np.ndarray:
     """SGMK-snippet analogue: pad the 2 active params with 14 zeros."""

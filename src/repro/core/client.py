@@ -54,10 +54,12 @@ class HTTPModel(Model):
         self.url = url
         self.timeout = timeout
         self.round_trips = 0  # HTTP requests issued (telemetry)
-        self._batch_supported: bool | None = None  # probed on first use
         self._sizes_cache: dict = {}  # config_key -> input sizes (static per config)
         info = self._rpc("/ModelInfo", {"name": name}, timeout=10.0)
         self._support = ModelSupport.from_json(info.get("support", {}))
+        # servers that advertise EvaluateBatch skip the endpoint probe; the
+        # rest are probed on first use (protocol-1.0 servers lack the route)
+        self._batch_supported: bool | None = True if self._support.evaluate_batch else None
 
     def _rpc(self, path: str, body: dict, timeout: float | None = None) -> dict:
         self.round_trips += 1
@@ -80,6 +82,13 @@ class HTTPModel(Model):
 
     def supports_apply_hessian(self):
         return self._support.apply_hessian
+
+    def supports_evaluate_batch(self):
+        """True when the remote serves /EvaluateBatch from a native batched
+        program — the whole wave then costs ONE round-trip AND one SPMD
+        dispatch on the server, so dispatch layers treat this client as a
+        native batch model."""
+        return self._support.evaluate_batch
 
     def __call__(self, parameters, config=None):
         body = {"name": self.name, "input": [list(map(float, p)) for p in parameters], "config": config or {}}

@@ -38,7 +38,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.interface import JAXModel, Model
+from repro.core.interface import JAXModel, Model, next_pow2, pad_to_bucket
 from repro.core.pool import ModelPool, ThreadedPool
 from repro.core.protocol import config_key, split_blocks
 
@@ -143,21 +143,44 @@ class ThreadedBackend(FabricBackend):
 
 
 class ModelBackend(FabricBackend):
-    """Any UM-Bridge `Model` — uses `evaluate_batch` when the model has one
-    (JAXModel vmap path, HTTPModel single `/EvaluateBatch` round-trip),
-    otherwise falls back to one `__call__` per point."""
+    """Any UM-Bridge `Model`. Models that advertise `supports_evaluate_batch`
+    get whole waves as ONE native dispatch (vmapped program / single
+    `/EvaluateBatch` round-trip), with power-of-2 shape bucketing when the
+    model jits over the batch axis (`batch_bucket`) so its trace cache stays
+    bounded. Everything else goes through the per-point `evaluate_batch`
+    fallback inherited from `Model` — telemetry distinguishes the two, so
+    benchmarks can prove no wave shattered into per-point calls."""
 
     name = "model"
 
     def __init__(self, model: Model):
         self.model = model
+        self.native = bool(getattr(model, "supports_evaluate_batch", lambda: False)())
+        self._stats = {
+            "native_batches": 0,
+            "native_points": 0,
+            "fallback_points": 0,
+            "padded": 0,
+        }
 
     def evaluate(self, thetas, config):
         thetas = np.atleast_2d(np.asarray(thetas, float))
+        N = len(thetas)
+        if self.native:
+            pad = 0
+            if getattr(self.model, "batch_bucket", False):
+                thetas, pad = pad_to_bucket(thetas, next_pow2(N))
+            out = np.atleast_2d(np.asarray(self.model.evaluate_batch(thetas, config)))
+            self._stats["native_batches"] += 1
+            self._stats["native_points"] += N
+            self._stats["padded"] += pad
+            return out[:N]
         if hasattr(self.model, "evaluate_batch"):
+            self._stats["fallback_points"] += N
             return np.atleast_2d(np.asarray(self.model.evaluate_batch(thetas, config)))
-        # per-point fallback: un-flatten each theta into the model's input
-        # blocks and re-flatten all output blocks (multi-block models)
+        # duck-typed models outside the Model hierarchy: un-flatten each
+        # theta into input blocks and re-flatten all output blocks
+        self._stats["fallback_points"] += N
         sizes = self.model.get_input_sizes(config)
         rows = []
         for t in thetas:
@@ -166,7 +189,8 @@ class ModelBackend(FabricBackend):
         return np.asarray(rows)
 
     def stats(self):
-        s = {"kind": self.name, "model": getattr(self.model, "name", "?")}
+        s = {"kind": self.name, "model": getattr(self.model, "name", "?"),
+             "native": self.native, **self._stats}
         rt = getattr(self.model, "round_trips", None)
         if rt is not None:
             s["round_trips"] = rt
@@ -300,6 +324,10 @@ class EvaluationFabric:
             "cache_misses": 0,
             "coalesced": 0,
             "direct_batches": 0,
+            # per-wave fill fraction accumulator: collector waves count
+            # len(wave)/max_batch, explicit evaluate_batch waves are full by
+            # definition (they bypass the collector cap)
+            "fill_sum": 0.0,
         }
         self._thread = threading.Thread(target=self._collector, daemon=True)
         self._thread.start()
@@ -415,6 +443,7 @@ class EvaluationFabric:
                 self.stats["waves"] += 1
                 self.stats["points"] += len(miss_order)
                 self.stats["direct_batches"] += 1
+                self.stats["fill_sum"] += 1.0
                 for k, out in zip(miss_order, outs):
                     self._cache_put(k, out)
                     fut = self._inflight.pop(k, None)
@@ -477,6 +506,7 @@ class EvaluationFabric:
             with self._lock:
                 self.stats["waves"] += 1
                 self.stats["points"] += len(batch)
+                self.stats["fill_sum"] += min(1.0, len(batch) / self.max_batch)
             self._tune(len(batch), time.monotonic() - t0)
 
     def _tune(self, wave_size: int, wave_latency: float):
@@ -499,6 +529,9 @@ class EvaluationFabric:
         s["cache_hit_rate"] = s["cache_hits"] / looked_up if looked_up else 0.0
         s["mean_wave_size"] = s["points"] / s["waves"] if s["waves"] else 0.0
         s["max_batch"] = self.max_batch
+        # mean fill fraction (0..1]: collector waves relative to the wave
+        # cap, explicit batches full by definition
+        s["wave_fill"] = s.pop("fill_sum") / s["waves"] if s["waves"] else 0.0
         s["linger_s"] = round(self.linger_s, 5)
         s["backend"] = self.backend.stats()
         back = s["backend"]

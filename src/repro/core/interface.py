@@ -28,6 +28,13 @@ import numpy as np
 class Model:
     """Abstract UM-Bridge model (mirror of umbridge.Model)."""
 
+    #: True = dispatch layers (fabric / pools) should pad waves to power-of-2
+    #: sizes before `evaluate_batch` so the jitted batch program only ever
+    #: sees log2(N) distinct shapes (bounded trace cache). Models that chunk
+    #: and pad INTERNALLY (tsunami, composite) leave this False — dispatcher
+    #: padding would turn into real extra solves on top of their own.
+    batch_bucket = False
+
     def __init__(self, name: str = "forward"):
         self.name = name
 
@@ -51,9 +58,32 @@ class Model:
     def supports_apply_hessian(self) -> bool:
         return False
 
+    def supports_evaluate_batch(self) -> bool:
+        """True when `evaluate_batch` is a NATIVE batched program (one SPMD
+        dispatch for N points) rather than the per-point fallback below.
+        Dispatch layers use this to route whole waves without shattering
+        them into per-point calls; the HTTP protocol advertises it via
+        `/ModelInfo` ("EvaluateBatch") so clients skip endpoint probing."""
+        return False
+
     # -- operations ---------------------------------------------------------
     def __call__(self, parameters: list[list[float]], config: dict | None = None):
         raise NotImplementedError
+
+    def evaluate_batch(self, thetas, config: dict | None = None) -> np.ndarray:
+        """[N, n_flat] -> [N, m_flat]. Default: per-point loop over
+        `__call__`, un-flattening each theta into the model's input blocks.
+        Native-batch models override this with one vectorized program and
+        return True from `supports_evaluate_batch`."""
+        from repro.core.protocol import split_blocks
+
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        sizes = self.get_input_sizes(config)
+        rows = []
+        for t in thetas:
+            out = self(split_blocks(t, sizes), config)
+            rows.append(np.concatenate([np.asarray(b, float).ravel() for b in out]))
+        return np.asarray(rows)
 
     def gradient(self, out_wrt: int, in_wrt: int, parameters, sens, config=None):
         raise NotImplementedError
@@ -109,6 +139,9 @@ class JAXModel(Model):
     def supports_apply_hessian(self) -> bool:
         return True
 
+    def supports_evaluate_batch(self) -> bool:
+        return True
+
     # -- machinery ----------------------------------------------------------
     def _ckey(self, config: dict | None):
         config = {**self._defaults, **(config or {})}
@@ -156,9 +189,14 @@ class JAXModel(Model):
         return [np.asarray(out).ravel().tolist()]
 
     def evaluate_batch(self, thetas: np.ndarray, config=None) -> np.ndarray:
-        """[N, n] -> [N, m]; the vectorized fast path used by ModelPool."""
-        out = self._get("eval_batch", config)(jnp.asarray(thetas))
-        return np.asarray(out).reshape(len(thetas), self._m)
+        """[N, n] -> [N, m]; the vectorized fast path used by ModelPool.
+        Batches are padded to the next power of two so the vmap jit cache
+        holds at most log2(N_max) shape specializations."""
+        thetas = np.atleast_2d(np.asarray(thetas))
+        N = len(thetas)
+        padded, _ = pad_to_bucket(thetas, next_pow2(N))
+        out = self._get("eval_batch", config)(jnp.asarray(padded))
+        return np.asarray(out).reshape(len(padded), self._m)[:N]
 
     def gradient(self, out_wrt, in_wrt, parameters, sens, config=None):
         theta = jnp.asarray(parameters[in_wrt])
@@ -180,6 +218,20 @@ class JAXModel(Model):
     @property
     def raw_fn(self) -> Callable:
         return self._fn
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (the batch-shape bucket boundary)."""
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+def pad_to_bucket(thetas: np.ndarray, bucket: int) -> tuple[np.ndarray, int]:
+    """Pad [N, n] up to `bucket` rows by repeating the last row; returns the
+    padded array and the pad count (padding telemetry)."""
+    pad = bucket - len(thetas)
+    if pad <= 0:
+        return thetas, 0
+    return np.concatenate([thetas, np.repeat(thetas[-1:], pad, 0)], 0), pad
 
 
 def as_jax_callable(model: Model, config: dict | None = None) -> Callable:

@@ -22,6 +22,7 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
 from typing import Callable, Sequence
 
@@ -29,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interface import JAXModel, Model
+from repro.core.interface import JAXModel, Model, next_pow2, pad_to_bucket
 from repro.core.protocol import config_key
 
 
@@ -54,7 +55,8 @@ class ModelPool:
             self.n_instances = ctx.n_data
         else:
             self.n_instances = max(len(jax.devices()), 1)
-        self.stats = {"batches": 0, "evaluations": 0, "padded": 0}
+        self.stats = {"batches": 0, "evaluations": 0, "padded": 0, "bucket_shapes": 0}
+        self._bucket_shapes: set[int] = set()
 
     def _dispatch_fn(self, config: dict | None = None):
         config = self.config if config is None else config
@@ -75,18 +77,21 @@ class ModelPool:
         return jfn
 
     def evaluate(self, thetas: np.ndarray, config: dict | None = None) -> np.ndarray:
-        """[N, n] -> [N, m]: pad to instance multiple, one SPMD dispatch per
-        wave. This is what the load balancer + k8s replicas do in the paper,
-        minus the HTTP."""
+        """[N, n] -> [N, m]: pad to the power-of-2 bucket (rounded up to an
+        instance multiple), one SPMD dispatch per wave. This is what the load
+        balancer + k8s replicas do in the paper, minus the HTTP; the
+        bucketing bounds the jit cache to ~log2(N_max) batch shapes."""
         # honor x64 like JAXModel.__call__ does, so the SPMD and HTTP paths
         # return identical precision for the same model
         dtype = np.float64 if jax.config.x64_enabled else np.float32
         thetas = np.atleast_2d(np.asarray(thetas, dtype))
         N = len(thetas)
         k = self.n_instances
-        pad = (-N) % k
-        if pad:
-            thetas = np.concatenate([thetas, np.repeat(thetas[-1:], pad, 0)], 0)
+        bucket = next_pow2(N)
+        bucket += (-bucket) % k
+        self._bucket_shapes.add(bucket)
+        self.stats["bucket_shapes"] = len(self._bucket_shapes)
+        thetas, pad = pad_to_bucket(thetas, bucket)
         fn = self._dispatch_fn(config)
         x = jnp.asarray(thetas)
         if self.ctx is not None:
@@ -210,9 +215,40 @@ class ThreadedPool:
             fut.add_done_callback(lambda _f: timer.cancel())
         return fut
 
-    def evaluate(self, thetas, config: dict | None = None) -> np.ndarray:
-        futs = [self.submit(t, config) for t in np.atleast_2d(np.asarray(thetas, float))]
-        return np.stack([f.result() for f in futs])
+    def evaluate(self, thetas, config: dict | None = None, timeout_s: float | None = None) -> np.ndarray:
+        """Submit every point in one pass, then collect under ONE shared
+        deadline (`timeout_s`, measured from submission of the whole wave).
+        Collecting with `wait` instead of in-order `result()` calls means a
+        poisoned first future cannot hide progress (or faults) on later
+        ones; partial failures surface every failing theta index at once."""
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        futs = [self.submit(t, config) for t in thetas]
+        _, not_done = futures_wait(futs, timeout=timeout_s)
+        for f in not_done:
+            # cancel stragglers still in the queue so abandoned work does
+            # not occupy workers ahead of the next wave (running ones are
+            # skipped by the worker loop once the future is done)
+            f.cancel()
+        failures: list[tuple[int, Exception]] = []
+        rows: list[np.ndarray | None] = [None] * len(futs)
+        for i, f in enumerate(futs):
+            if f in not_done:
+                failures.append((i, TimeoutError(
+                    f"evaluation exceeded the shared {timeout_s}s deadline"
+                )))
+                continue
+            exc = f.exception()
+            if exc is not None:
+                failures.append((i, exc))
+            else:
+                rows[i] = f.result()
+        if failures:
+            idx = [i for i, _ in failures]
+            raise RuntimeError(
+                f"ThreadedPool.evaluate: {len(failures)}/{len(futs)} points failed "
+                f"(theta indices {idx}); first: {failures[0][1]!r}"
+            ) from failures[0][1]
+        return np.stack(rows)
 
     __call__ = evaluate
 

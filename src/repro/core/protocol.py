@@ -38,6 +38,10 @@ class ModelSupport:
     gradient: bool = False
     apply_jacobian: bool = False
     apply_hessian: bool = False
+    # batched extension: the server accepts /EvaluateBatch for this model
+    # AND serves it from a native batched program (not a per-point loop) —
+    # clients use this to skip endpoint probing and dispatch whole waves
+    evaluate_batch: bool = False
 
     def to_json(self) -> dict:
         return {
@@ -45,6 +49,7 @@ class ModelSupport:
             "Gradient": self.gradient,
             "ApplyJacobian": self.apply_jacobian,
             "ApplyHessian": self.apply_hessian,
+            "EvaluateBatch": self.evaluate_batch,
         }
 
     @classmethod
@@ -54,6 +59,7 @@ class ModelSupport:
             gradient=d.get("Gradient", False),
             apply_jacobian=d.get("ApplyJacobian", False),
             apply_hessian=d.get("ApplyHessian", False),
+            evaluate_batch=d.get("EvaluateBatch", False),
         )
 
 

@@ -18,7 +18,6 @@ from repro.core.interface import Model
 from repro.core.protocol import (
     PROTOCOL_VERSION,
     error_body,
-    split_blocks,
     validate_evaluate_batch_request,
     validate_evaluate_request,
 )
@@ -67,6 +66,9 @@ def _make_handler(models: dict[str, Model]):
                                 "Gradient": model.supports_gradient(),
                                 "ApplyJacobian": model.supports_apply_jacobian(),
                                 "ApplyHessian": model.supports_apply_hessian(),
+                                "EvaluateBatch": bool(
+                                    getattr(model, "supports_evaluate_batch", lambda: False)()
+                                ),
                             }
                         }
                     )
@@ -86,17 +88,14 @@ def _make_handler(models: dict[str, Model]):
                     if err:
                         return self._send(error_body("InvalidInput", err), 400)
                     inputs = body["inputs"]
-                    if hasattr(model, "evaluate_batch") and len(sizes) == 1:
-                        outs = np.atleast_2d(
-                            model.evaluate_batch(np.asarray(inputs, float), config)
-                        )
-                        outputs = [list(map(float, row)) for row in outs]
-                    else:
-                        outputs = []
-                        for vec in inputs:
-                            out = model(split_blocks(vec, sizes), config)
-                            outputs.append([float(v) for blk in out for v in blk])
-                    return self._send({"outputs": outputs})
+                    # `Model.evaluate_batch` handles both the native batched
+                    # program and the per-point fallback (multi-block safe)
+                    outs = np.atleast_2d(
+                        model.evaluate_batch(np.asarray(inputs, float), config)
+                    )
+                    return self._send(
+                        {"outputs": [list(map(float, row)) for row in outs]}
+                    )
                 if self.path == "/Gradient":
                     out = model.gradient(
                         body["outWrt"], body["inWrt"], body["input"], body["sens"], config

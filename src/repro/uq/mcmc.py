@@ -1,9 +1,18 @@
-"""MCMC: random-walk Metropolis, adaptive Metropolis (Haario), pCN.
+"""MCMC: random-walk Metropolis, adaptive Metropolis (Haario), pCN — plus
+lockstep ENSEMBLE variants of RWM and pCN.
 
 Host-side implementations (the paper's UQ drivers run on a laptop /
 workstation and treat the model as remote), with ESS / R-hat diagnostics.
-Chains are embarrassingly parallel — `run_chains` matches the paper's
-100-independent-samplers pattern via a thread pool.
+Chains are embarrassingly parallel two ways:
+
+* `run_chains` — K chains as K threads (the paper's 100-independent-samplers
+  pattern); each proposal is ONE model call, so waves only form if a fabric
+  collector catches concurrent submits mid-flight.
+* `ensemble_random_walk_metropolis` / `ensemble_pcn` — K chains advanced in
+  LOCKSTEP: every step proposes for all chains at once and costs exactly ONE
+  `evaluate_batch` wave of K points, which native batch models (vmapped JAX
+  apps, `/EvaluateBatch` servers) evaluate as one SPMD program. Same
+  per-chain Markov kernel, perfectly filled waves by construction.
 """
 from __future__ import annotations
 
@@ -20,6 +29,133 @@ class ChainResult:
     logposts: np.ndarray  # [n]
     accept_rate: float
     n_model_evals: int
+
+
+@dataclass
+class EnsembleResult:
+    """K lockstep chains: samples [K, n_steps, d], one wave per step."""
+
+    samples: np.ndarray  # [K, n, d]
+    logposts: np.ndarray  # [K, n]
+    accept_rates: np.ndarray  # [K]
+    # proposal points submitted to the logpost (K per wave); prior-masked
+    # points never reach the model — `batched_logpost(...).points_evaluated`
+    # counts the ones that did
+    n_model_evals: int
+    n_waves: int  # batched model dispatches (steps + 1)
+
+    @property
+    def accept_rate(self) -> float:
+        return float(np.mean(self.accept_rates))
+
+    def chains(self) -> list[ChainResult]:
+        """Per-chain view, interchangeable with `run_chains` output."""
+        return [
+            ChainResult(
+                self.samples[k],
+                self.logposts[k],
+                float(self.accept_rates[k]),
+                self.n_waves,
+            )
+            for k in range(len(self.samples))
+        ]
+
+
+def batched_logpost(
+    evaluator,
+    loglik: Callable[[np.ndarray], float],
+    logprior: Callable[[np.ndarray], float] | None = None,
+    config: dict | None = None,
+) -> Callable[[np.ndarray], np.ndarray]:
+    """[K, d] -> [K] log-posterior for the ensemble samplers, from anything
+    with an `evaluate_batch(thetas, config)` (EvaluationFabric, native batch
+    Model, HTTPModel) or a plain batched callable. Out-of-prior chains are
+    masked BEFORE the wave, so no model evaluation is wasted on them."""
+
+    def logpost(thetas: np.ndarray) -> np.ndarray:
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        K = len(thetas)
+        out = np.full(K, -np.inf)
+        prior = np.zeros(K)
+        if logprior is not None:
+            prior = np.asarray([float(logprior(t)) for t in thetas])
+        ok = np.isfinite(prior)
+        if ok.any():
+            if hasattr(evaluator, "evaluate_batch"):
+                ys = evaluator.evaluate_batch(thetas[ok], config)
+            else:
+                ys = evaluator(thetas[ok])
+            ys = np.atleast_2d(np.asarray(ys, float))
+            out[ok] = prior[ok] + np.asarray([float(loglik(y)) for y in ys])
+        logpost.points_evaluated += int(ok.sum())
+        logpost.waves += 1
+        return out
+
+    # model points actually evaluated (prior-masked proposals never reach
+    # the model) — benchmarks report honest evals/sec from these
+    logpost.points_evaluated = 0
+    logpost.waves = 0
+    return logpost
+
+
+def ensemble_random_walk_metropolis(
+    logpost_batch: Callable[[np.ndarray], np.ndarray],
+    x0s: np.ndarray,
+    n_steps: int,
+    prop_cov: np.ndarray,
+    rng: np.random.Generator,
+) -> EnsembleResult:
+    """K lockstep RWM chains: ONE [K, d] -> [K] model wave per step.
+
+    Each chain runs the standard Metropolis kernel (same proposal covariance,
+    independent randomness per chain) — only the model evaluations are fused,
+    so the per-chain law matches `random_walk_metropolis`."""
+    xs = np.atleast_2d(np.asarray(x0s, float)).copy()
+    K, d = xs.shape
+    L = np.linalg.cholesky(np.atleast_2d(prop_cov))
+    lps = np.asarray(logpost_batch(xs), float).ravel()
+    samples = np.empty((K, n_steps, d))
+    lps_out = np.empty((K, n_steps))
+    acc = np.zeros(K)
+    for i in range(n_steps):
+        props = xs + rng.standard_normal((K, d)) @ L.T
+        lp_props = np.asarray(logpost_batch(props), float).ravel()
+        accept = np.log(rng.uniform(size=K)) < lp_props - lps
+        xs = np.where(accept[:, None], props, xs)
+        lps = np.where(accept, lp_props, lps)
+        acc += accept
+        samples[:, i] = xs
+        lps_out[:, i] = lps
+    return EnsembleResult(samples, lps_out, acc / n_steps, K * (n_steps + 1), n_steps + 1)
+
+
+def ensemble_pcn(
+    loglik_batch: Callable[[np.ndarray], np.ndarray],
+    prior_sample: Callable[[np.random.Generator, int], np.ndarray],
+    x0s: np.ndarray,
+    n_steps: int,
+    beta: float,
+    rng: np.random.Generator,
+) -> EnsembleResult:
+    """K lockstep pCN chains (Gaussian priors; dimension-robust); ONE model
+    wave per step. `prior_sample(rng, K)` draws [K, d] prior samples."""
+    xs = np.atleast_2d(np.asarray(x0s, float)).copy()
+    K, _ = xs.shape
+    lls = np.asarray(loglik_batch(xs), float).ravel()
+    samples = np.empty((K, n_steps, xs.shape[1]))
+    lls_out = np.empty((K, n_steps))
+    acc = np.zeros(K)
+    root = np.sqrt(1.0 - beta**2)
+    for i in range(n_steps):
+        props = root * xs + beta * np.atleast_2d(prior_sample(rng, K))
+        ll_props = np.asarray(loglik_batch(props), float).ravel()
+        accept = np.log(rng.uniform(size=K)) < ll_props - lls
+        xs = np.where(accept[:, None], props, xs)
+        lls = np.where(accept, ll_props, lls)
+        acc += accept
+        samples[:, i] = xs
+        lls_out[:, i] = lls
+    return EnsembleResult(samples, lls_out, acc / n_steps, K * (n_steps + 1), n_steps + 1)
 
 
 def random_walk_metropolis(
