@@ -27,7 +27,12 @@ from repro.uq.mcmc import (
     random_walk_metropolis,
     run_chains,
 )
-from repro.uq.mlda import fabric_logposts, mlda
+from repro.uq.mlda import (
+    batched_level_logposts,
+    ensemble_mlda,
+    fabric_logposts,
+    mlda,
+)
 from repro.uq.qmc import sobol
 
 TRUE_THETA = np.array([90.0, 2.5])
@@ -42,12 +47,17 @@ class _RemoteModel(Model):
     ONE latency (the cluster's instances run concurrently) and flows into
     the inner model's native `evaluate_batch`; per-point calls pay one
     latency EACH — exactly the dispatch tax the lockstep samplers remove.
-    `native=False` disables the batch path (the 'before' configuration)."""
+    `native=False` disables the batch path (the 'before' configuration).
+    `slowdown` emulates a uniformly slower sub-cluster (4x-slower hardware:
+    solve AND dispatch both scale) by sleeping `(slowdown-1) x` the measured
+    service time after each call — the router-imbalance phase uses it."""
 
-    def __init__(self, inner: Model, latency_s: float, native: bool = True):
+    def __init__(self, inner: Model, latency_s: float, native: bool = True,
+                 slowdown: float = 1.0):
         super().__init__(inner.name)
         self.inner = inner
         self.latency_s = latency_s
+        self.slowdown = float(slowdown)
         self._native = native and bool(
             getattr(inner, "supports_evaluate_batch", lambda: False)()
         )
@@ -66,16 +76,24 @@ class _RemoteModel(Model):
         return self._native
 
     def __call__(self, p, c=None):
+        t0 = time.monotonic()
         if self.latency_s:
             time.sleep(self.latency_s)
-        return self.inner(p, c)
+        out = self.inner(p, c)
+        if self.slowdown > 1.0:
+            time.sleep((self.slowdown - 1.0) * (time.monotonic() - t0))
+        return out
 
     def evaluate_batch(self, thetas, config=None):
         if not self._native:  # legacy cluster: one round-trip per point
             return super().evaluate_batch(thetas, config)
+        t0 = time.monotonic()
         if self.latency_s:
             time.sleep(self.latency_s)
-        return self.inner.evaluate_batch(thetas, config)
+        out = self.inner.evaluate_batch(thetas, config)
+        if self.slowdown > 1.0:
+            time.sleep((self.slowdown - 1.0) * (time.monotonic() - t0))
+        return out
 
 
 def build_hierarchy(n_gp_train: int = 128, seed: int = 3, cluster_latency_s: float = 0.0):
@@ -104,6 +122,9 @@ def build_hierarchy(n_gp_train: int = 128, seed: int = 3, cluster_latency_s: flo
         obs = np.array([float(g.predict(np.array([[x0, A]]))[0]) for g in gps])
         return float(-0.5 * np.sum(((obs - data) / NOISE_SD) ** 2))
 
+    def gp_logpost_batch(thetas):
+        return np.asarray([gp_logpost(t) for t in np.atleast_2d(thetas)])
+
     # PDE levels flow through ONE EvaluationFabric: chains coalesce into
     # waves and MLDA's repeated coarse states hit the result cache instead
     # of the (emulated) cluster
@@ -124,7 +145,16 @@ def build_hierarchy(n_gp_train: int = 128, seed: int = 3, cluster_latency_s: flo
     )
     print(f"GP training: {n_gp_train} smoothed-model evals in {t_train_evals:.1f}s, "
           f"4 GP fits in {t_gp:.1f}s")
-    return model, [gp_logpost, *pde_logposts], data, fabric
+    return {
+        "model": model,
+        "logposts": [gp_logpost, *pde_logposts],
+        "gp_logpost": gp_logpost,
+        "gp_logpost_batch": gp_logpost_batch,
+        "data": data,
+        "fabric": fabric,
+        "loglik": loglik,
+        "logprior": logprior,
+    }
 
 
 def _ensemble_burnin(
@@ -188,8 +218,7 @@ def _ensemble_burnin(
     # don't)
     lp_batch = batched_logpost(fabric, loglik, logprior, {"level": 0})
     lp_batch(x0s)  # warm the batched jit path — the per-point baseline above
-    lp_batch.points_evaluated = 0  # runs warm too (compiled during setup)
-    lp_batch.waves = 0
+    lp_batch.reset()  # runs warm too (compiled during setup)
     t0 = time.monotonic()
     res = ensemble_random_walk_metropolis(lp_batch, x0s, n_burn, prop_cov, rng)
     wall_ls = time.monotonic() - t0
@@ -218,6 +247,123 @@ def _ensemble_burnin(
     return {"stats": out, "final_states": res.samples[:, -1, :]}
 
 
+def _ensemble_mlda_phase(
+    h: dict,
+    n_fine: int,
+    subsampling,
+    cluster_latency_s: float,
+    prop_cov: np.ndarray,
+    x0s: np.ndarray,
+) -> dict:
+    """Lockstep ensemble MLDA vs the per-point single-chain MLDA path, on
+    the same host budget and the same (emulated) remote cluster: the single
+    chain pays one cluster round-trip per subchain step, the K-chain
+    ensemble turns each subchain step / acceptance test into ONE
+    `evaluate_batch` wave — the paper's 1400-coarse/800-fine budget as ~tens
+    of waves instead of thousands of round-trips."""
+    model, loglik, logprior = h["model"], h["loglik"], h["logprior"]
+    K = len(x0s)
+    level_cfgs = [{"level": 0}, {"level": 1}]
+
+    # before: ONE chain, per-point dispatch (the seed's only MLDA discipline)
+    fab_pp = EvaluationFabric(
+        ModelBackend(_RemoteModel(model, cluster_latency_s)), cache_size=8192
+    )
+    logposts_pp = [
+        h["gp_logpost"],
+        *fabric_logposts(fab_pp, loglik, level_cfgs, logprior=logprior),
+    ]
+    t0 = time.monotonic()
+    res_pp = mlda(
+        logposts_pp, x0s[0], n_fine, list(subsampling), prop_cov,
+        np.random.default_rng(500),
+    )
+    wall_pp = time.monotonic() - t0
+    evals_pp = int(np.sum(res_pp.evals_per_level))
+    fab_pp.shutdown()
+
+    # after: K chains in lockstep through the batch-native fabric
+    fab_ls = EvaluationFabric(
+        ModelBackend(_RemoteModel(model, cluster_latency_s)), cache_size=8192
+    )
+    lp_batches = [
+        h["gp_logpost_batch"],
+        *batched_level_logposts(fab_ls, loglik, level_cfgs, logprior=logprior),
+    ]
+    t0 = time.monotonic()
+    res_ls = ensemble_mlda(
+        lp_batches, x0s, n_fine, list(subsampling), prop_cov,
+        np.random.default_rng(501),
+    )
+    wall_ls = time.monotonic() - t0
+    evals_ls = int(np.sum(res_ls.evals_per_level))
+    tel = fab_ls.telemetry()
+    fab_ls.shutdown()
+
+    rate_pp = evals_pp / wall_pp
+    rate_ls = evals_ls / wall_ls
+    out = {
+        "n_chains": K,
+        "n_fine_samples": n_fine,
+        "single_chain_evals_per_sec": round(rate_pp, 2),
+        "ensemble_evals_per_sec": round(rate_ls, 2),
+        "speedup": round(rate_ls / rate_pp, 2),
+        "single_chain_evals": evals_pp,
+        "ensemble_evals": evals_ls,
+        "ensemble_waves": res_ls.n_waves,
+        "ensemble_wave_fill": round(tel["wave_fill"], 3),
+        "ensemble_evals_per_level": res_ls.evals_per_level,
+        "accept_rates": [round(r, 3) for r in res_ls.accept_rates],
+    }
+    print(f"ensemble MLDA, {K} lockstep chains x {n_fine} fine samples: "
+          f"single-chain per-point {out['single_chain_evals_per_sec']} evals/s "
+          f"-> ensemble {out['ensemble_evals_per_sec']} evals/s "
+          f"({out['speedup']}x), {evals_ls} evals in {res_ls.n_waves} waves")
+    return out
+
+
+def _router_phase(
+    model: TsunamiModel,
+    cluster_latency_s: float,
+    n_points: int = 16,
+    n_waves: int = 4,
+) -> dict:
+    """Heterogeneous cluster: a fast sub-cluster and one 4x slower (the
+    paper's uneven-resources case, cf. Loi/Wille/Reinarz). The same waves of
+    coarse tsunami solves run under round-robin and latency-aware routing;
+    report the imbalance factor (wave wall time over ideal balanced wall
+    time) and throughput for both."""
+    from benchmarks.weak_scaling import measure_router_policies
+
+    lat = max(cluster_latency_s, 0.02)
+    rng = np.random.default_rng(7)
+    n_total = n_points * (n_waves + 2)
+    thetas = np.stack(
+        [rng.uniform(*PRIOR[0], n_total), rng.uniform(*PRIOR[1], n_total)],
+        axis=1,
+    )
+    # the 2-core budget: two single-tenant sub-clusters, one on uniformly
+    # 4x-slower (emulated) hardware
+    out = measure_router_policies(
+        lambda: [
+            ThreadedPool(_RemoteModel(model, lat, native=False), n_instances=1),
+            ThreadedPool(
+                _RemoteModel(model, lat, native=False, slowdown=4.0),
+                n_instances=1,
+            ),
+        ],
+        thetas, n_points, n_waves, config={"level": 0},
+    )
+    print(f"router over [1x, 4x-slower] sub-clusters, {n_waves} waves x "
+          f"{n_points} pts: round_robin imbalance "
+          f"{out['round_robin']['imbalance']} "
+          f"({out['round_robin']['evals_per_sec']} evals/s) -> latency-aware "
+          f"{out['latency']['imbalance']} "
+          f"({out['latency']['evals_per_sec']} evals/s, shares "
+          f"{out['latency']['backend_share']})")
+    return out
+
+
 def run(
     n_chains: int = 8,
     n_fine_samples: int = 7,
@@ -229,9 +375,8 @@ def run(
     # GP runs on the workstation; PDE levels are dispatched through the
     # fabric to an (emulated) remote cluster — latency-dominated from the UQ
     # process's perspective, so chains parallelize and cache hits are free
-    model, logposts, data, fabric = build_hierarchy(
-        n_gp_train, cluster_latency_s=cluster_latency_s
-    )
+    h = build_hierarchy(n_gp_train, cluster_latency_s=cluster_latency_s)
+    model, logposts, data, fabric = h["model"], h["logposts"], h["data"], h["fabric"]
     prop_cov = np.diag([8.0**2, 0.25**2])  # pre-tuned to the GP posterior scale
 
     # lockstep ensemble burn-in on the smoothed level: one batched wave per
@@ -262,6 +407,15 @@ def run(
     rhat = gelman_rubin(chains_x)
     fab = fabric.telemetry()
     fabric.shutdown()
+
+    # tentpole phases: lockstep ensemble MLDA vs the per-point single chain,
+    # and latency-aware routing over a deliberately uneven cluster
+    K = max(8, n_chains)  # K >= 8 so wave amortization is visible even quick
+    ens_mlda = _ensemble_mlda_phase(
+        h, n_fine_samples, subsampling, cluster_latency_s,
+        prop_cov, np.resize(x0s, (K, x0s.shape[1])),
+    )
+    router = _router_phase(model, cluster_latency_s)
     print(f"chains={n_chains} fine samples/chain={n_fine_samples} wall={wall:.1f}s")
     print(f"evals per level (GP, smoothed, fine): {evals.tolist()} "
           f"(paper: GP free, 1400 smoothed, 800 fine)")
@@ -281,6 +435,8 @@ def run(
         "cache_hit_rate": fab["cache_hit_rate"],
         "cache_hits": fab["cache_hits"],
         "ensemble": ens["stats"],
+        "ensemble_mlda": ens_mlda,
+        "router": router,
     }
 
 

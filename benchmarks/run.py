@@ -4,10 +4,11 @@
 
 Prints a ``name,us_per_call,derived`` CSV line per benchmark (quick mode by
 default so the suite completes in a few minutes on one CPU core; --full runs
-the paper-scale protocols). ``--json PATH`` additionally writes a
-machine-readable ``BENCH_results.json`` — one row per benchmark with
-``name`` / ``us_per_call`` / ``evals_per_sec`` / ``derived`` plus the full
-result payloads — so the perf trajectory is tracked across PRs.
+the paper-scale protocols). Machine-readable results — one row per benchmark
+with ``name`` / ``us_per_call`` / ``evals_per_sec`` / ``derived`` plus the
+full result payloads — always go to the ONE canonical ``BENCH_results.json``
+at the repo root (override the path with ``--json``), so the perf trajectory
+is tracked across PRs from a single file.
 """
 from __future__ import annotations
 
@@ -20,6 +21,16 @@ from pathlib import Path
 
 def _csv(name: str, us_per_call: float, derived: str):
     print(f"CSV,{name},{us_per_call:.1f},{derived}")
+
+
+def _fmt_imbalance(router: dict) -> str:
+    # router_imbalance is None when no measured wave split across backends
+    # (e.g. one backend sat in failure backoff for the whole window)
+    def f(v):
+        return f"{v:.2f}" if v is not None else "n/a"
+
+    return (f";router_imbalance={f(router['latency']['imbalance'])}"
+            f"(rr={f(router['round_robin']['imbalance'])})")
 
 
 def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
@@ -37,6 +48,8 @@ def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
             ls = out["lockstep"]
             derived += f";lockstep_speedup={ls['speedup']:.1f}x"
             rate = ls["ensemble_evals_per_sec"]
+        if isinstance(out, dict) and "router" in out:
+            derived += _fmt_imbalance(out["router"])
     elif name.startswith("batch_eval"):
         ts = out["tsunami_coarse"]
         derived = (f"tsunami_batch_speedup={ts['speedup']:.1f}x;"
@@ -51,6 +64,12 @@ def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
         if isinstance(out, dict) and "ensemble" in out:
             derived += f";ensemble_speedup={out['ensemble']['speedup']:.1f}x"
             rate = out["ensemble"]["ensemble_evals_per_sec"]
+        if isinstance(out, dict) and "ensemble_mlda" in out:
+            em = out["ensemble_mlda"]
+            derived += f";ensemble_mlda_speedup={em['speedup']:.1f}x"
+            rate = em["ensemble_evals_per_sec"]
+        if isinstance(out, dict) and "router" in out:
+            derived += _fmt_imbalance(out["router"])
     elif name == "roofline":
         fracs = [c["roofline_fraction"] for c in out]
         derived = f"cells={len(out)};median_frac={sorted(fracs)[len(fracs)//2]:.3f}"
@@ -61,8 +80,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="")
-    ap.add_argument("--json", default="", metavar="PATH",
-                    help="write machine-readable results (BENCH_results.json)")
+    ap.add_argument("--json", default="BENCH_results.json", metavar="PATH",
+                    help="machine-readable results path (default: the "
+                         "canonical BENCH_results.json at the repo root)")
     args, _ = ap.parse_known_args()
     quick = not args.full
     results = {}
@@ -110,13 +130,10 @@ def main() -> None:
                 _write_json(args.json, quick, rows, results, failed=f"{name}: {e!r}")
             raise
 
-    out_file = Path("experiments") / "bench_results.json"
-    out_file.parent.mkdir(exist_ok=True)
-    out_file.write_text(json.dumps(results, indent=1, default=_jsonable))
-    print(f"\nresults -> {out_file}")
-    if args.json:
-        _write_json(args.json, quick, rows, results)
-        print(f"machine-readable -> {args.json}")
+    # ONE canonical results file (the old scratch copy under experiments/
+    # is gone — experiments/ stays gitignored for ad-hoc local output)
+    _write_json(args.json, quick, rows, results)
+    print(f"\nresults -> {args.json}")
 
 
 def _jsonable(o):

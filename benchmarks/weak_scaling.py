@@ -19,7 +19,13 @@ import time
 import numpy as np
 
 from repro.core.client import HTTPModel
-from repro.core.fabric import EvaluationFabric, HTTPBackend, ModelBackend
+from repro.core.fabric import (
+    EvaluationFabric,
+    FabricRouter,
+    HTTPBackend,
+    ModelBackend,
+    ThreadedBackend,
+)
 from repro.core.interface import JAXModel, Model
 from repro.core.pool import ThreadedPool
 from repro.core.server import serve_models
@@ -209,12 +215,84 @@ def run_lockstep(n_chains: int = 16, n_steps: int = 50):
     return out
 
 
+def measure_router_policies(
+    make_pools,
+    thetas: np.ndarray,
+    n_points: int,
+    n_waves: int,
+    config: dict | None = None,
+    warmup_waves: int = 2,
+) -> dict:
+    """Shared router-measurement harness: run the same waves under the
+    round-robin baseline and the latency-aware policy over pools built
+    FRESH per policy by `make_pools()`. The warm-up waves teach the EWMA
+    the per-backend service times, then `reset_stats` so the reported
+    shares/imbalance are the steady state, not the cold probe. `thetas`
+    must hold `n_points * (n_waves + warmup_waves)` rows."""
+    out = {}
+    for policy in ("round_robin", "latency"):
+        router = FabricRouter(
+            [ThreadedBackend(p) for p in make_pools()], policy=policy
+        )
+        fab = EvaluationFabric(router, cache_size=0)
+        for w in range(warmup_waves):
+            fab.evaluate_batch(thetas[w * n_points:(w + 1) * n_points], config)
+        router.reset_stats()
+        t0 = time.monotonic()
+        for w in range(warmup_waves, n_waves + warmup_waves):
+            fab.evaluate_batch(thetas[w * n_points:(w + 1) * n_points], config)
+        wall = time.monotonic() - t0
+        tel = fab.telemetry()
+        out[policy] = {
+            "imbalance": tel["router_imbalance"],
+            "last_imbalance": router.router_stats["last_imbalance"],
+            "backend_share": tel["backend_share"],
+            "evals_per_sec": round(n_points * n_waves / wall, 2),
+        }
+        fab.shutdown()
+    return out
+
+
+def run_router(
+    n_points: int = 32,
+    n_waves: int = 4,
+    eval_cost_s: float = 0.02,
+    slow_factor: float = 4.0,
+):
+    """Heterogeneous pool balancing: two sub-clusters of 2 instances each,
+    one `slow_factor`x slower per evaluation. The same waves run under
+    round-robin (static even split — what a config-file share list gives
+    you) and the router's latency-aware policy (EWMA service time + JSQ);
+    report steady-state imbalance factor and throughput for both."""
+    rng = np.random.default_rng(3)
+    thetas = rng.standard_normal((n_points * (n_waves + 2), 16))
+    out = measure_router_policies(
+        lambda: [
+            ThreadedPool([_FixedCostModel(eval_cost_s) for _ in range(2)]),
+            ThreadedPool(
+                [_FixedCostModel(eval_cost_s * slow_factor) for _ in range(2)]
+            ),
+        ],
+        thetas, n_points, n_waves,
+    )
+    print(f"router, [1x, {slow_factor:g}x-slower] pools, {n_waves} waves x "
+          f"{n_points} pts: round_robin imbalance "
+          f"{out['round_robin']['imbalance']} -> latency "
+          f"{out['latency']['imbalance']} (shares "
+          f"{out['latency']['backend_share']}, "
+          f"{out['round_robin']['evals_per_sec']} -> "
+          f"{out['latency']['evals_per_sec']} evals/s)")
+    return out
+
+
 def main(quick: bool = False):
     counts = (1, 2, 4, 8, 16) if quick else (1, 2, 4, 8, 16, 32, 64)
     rows = run(eval_cost_s=0.05 if quick else 0.1, counts=counts)
     http = run_http(n_servers=2 if quick else 4, n_points=32 if quick else 64)
     lockstep = run_lockstep(n_chains=8 if quick else 16, n_steps=30 if quick else 50)
-    return {"weak_scaling": rows, "http_round_trips": http, "lockstep": lockstep}
+    router = run_router(n_points=16 if quick else 32, n_waves=3 if quick else 4)
+    return {"weak_scaling": rows, "http_round_trips": http,
+            "lockstep": lockstep, "router": router}
 
 
 if __name__ == "__main__":

@@ -4,6 +4,7 @@ from repro.core.fabric import (  # noqa: F401
     CallableBackend,
     EvaluationFabric,
     FabricBackend,
+    FabricRouter,
     HTTPBackend,
     ModelBackend,
     SPMDBackend,

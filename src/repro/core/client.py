@@ -6,6 +6,9 @@
 `evaluate_batch` ships N points in one `/EvaluateBatch` round-trip (falling
 back to per-point `/Evaluate` against servers that predate the extension);
 `round_trips` counts HTTP requests so benchmarks can report the saving.
+`register_servers` probes a cluster of server URLs via GET `/Health` and
+returns one fabric backend per live server, ready for `FabricRouter`
+load balancing.
 """
 from __future__ import annotations
 
@@ -46,6 +49,59 @@ def _post(url: str, path: str, body: dict, timeout: float = 60.0) -> dict:
 def supported_models(url: str) -> list[str]:
     with urllib.request.urlopen(url.rstrip("/") + "/Info", timeout=10.0) as resp:
         return json.loads(resp.read())["models"]
+
+
+def probe_health(url: str, timeout: float = 5.0) -> dict | None:
+    """GET `/Health` (falling back to `/Info` for servers that predate the
+    probe); returns the health document, or None when the server is down."""
+    for path in ("/Health", "/Info"):
+        try:
+            with urllib.request.urlopen(url.rstrip("/") + path, timeout=timeout) as resp:
+                doc = json.loads(resp.read())
+            doc.setdefault("status", "ok")
+            return doc
+        except (urllib.error.HTTPError,):
+            continue  # route missing: try the older probe
+        except (OSError, ValueError):
+            return None
+    return None
+
+
+def register_servers(
+    urls,
+    name: str = "forward",
+    *,
+    timeout: float = 600.0,
+    require_all: bool = False,
+) -> list:
+    """Probe each server's `/Health` and enroll the live ones as independent
+    fabric backends — ONE `HTTPBackend` per server, so a `FabricRouter` (or
+    `EvaluationFabric(register_servers(urls))`) load-balances across the
+    cluster with per-server latency tracking and failover, instead of the
+    static contiguous split a single multi-client `HTTPBackend` does.
+
+    Dead servers are skipped (raise with `require_all=True`); registering
+    zero live servers always raises."""
+    from repro.core.fabric import HTTPBackend
+
+    backends, dead = [], []
+    for url in urls:
+        doc = probe_health(url)
+        if (
+            doc is None
+            or doc.get("status") != "ok"
+            # a live server that does not host the requested model would
+            # fail every routed wave — count it as dead at registration
+            or name not in doc.get("models", [name])
+        ):
+            dead.append(url)
+            continue
+        backends.append(HTTPBackend([HTTPModel(url, name, timeout=timeout)]))
+    if dead and require_all:
+        raise RuntimeError(f"unhealthy servers: {dead}")
+    if not backends:
+        raise RuntimeError(f"no healthy servers among {list(urls)}")
+    return backends
 
 
 class HTTPModel(Model):

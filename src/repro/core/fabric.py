@@ -16,6 +16,10 @@ with
   * pluggable backends — SPMD `ModelPool`, `ThreadedPool`, `HTTPModel`
     fan-out over several servers (one `/EvaluateBatch` round-trip each),
     any UM-Bridge `Model`, or a plain batched callable;
+  * heterogeneous clusters — a LIST of backends becomes a `FabricRouter`:
+    latency-aware weighted dispatch (EWMA service time, join-shortest-queue
+    tie-break) with per-backend failure backoff and retry-on-another-backend,
+    so mixed SPMD/threaded/HTTP resources serve one fabric;
   * adaptive batching — per-point submits are packed into waves; the linger
     window and max wave size self-tune from observed wave latency;
   * an LRU result cache keyed on `(theta.tobytes(), config)` — dedupes the
@@ -235,8 +239,273 @@ class HTTPBackend(FabricBackend):
         self._ex.shutdown(wait=False)
 
 
+class FabricRouter(FabricBackend):
+    """Latency-aware load balancer over N heterogeneous backends.
+
+    The paper's §3 load balancer fronts a *cluster of model instances*; Loi,
+    Wille & Reinarz show that on uneven resources the balancing must be
+    dynamic — a static split wastes the fast instances waiting on the slow
+    ones. The router implements that for whole fabric waves:
+
+      * **weighted routing** — each backend carries an EWMA of its observed
+        per-point service time; a wave of N points is split proportionally to
+        `n_instances / ewma` (estimated throughput), so a backend that is 4x
+        slower receives ~1/4 the points and every shard finishes together;
+      * **join-shortest-queue tie-break** — leftover points (and whole waves
+        smaller than the backend count) go to the backend with the lowest
+        projected queue-time `(inflight + assigned) / throughput`;
+      * **failure backoff + steal** — a backend that raises mid-wave is put
+        on exponential backoff and its shard is re-dispatched to another
+        backend (a "steal"); the wave completes as long as one backend lives;
+      * **config bindings** — `bind(config, [i, j])` restricts waves carrying
+        that config to a backend subset (MLDA binds `{"level": l}` to the
+        sub-cluster sized for level l);
+      * **telemetry** — per-backend share / points / failures / EWMA, steal
+        count, and the wave imbalance factor (actual wave wall time over the
+        ideal perfectly-balanced wall time; 1.0 = no straggling, round-robin
+        over a 4x-slower backend gives ~2.5).
+
+    `policy="round_robin"` disables the latency weighting (even split in
+    cursor order) — kept as the explicit baseline benchmarks compare against.
+    """
+
+    name = "router"
+
+    def __init__(
+        self,
+        backends: Sequence,
+        *,
+        policy: str = "latency",
+        backoff_s: float = 0.25,
+        backoff_max_s: float = 30.0,
+    ):
+        self.backends = [as_backend(b) for b in backends]
+        if not self.backends:
+            raise ValueError("FabricRouter needs at least one backend")
+        if policy not in ("latency", "round_robin"):
+            raise ValueError(f"unknown routing policy {policy!r}")
+        self.policy = policy
+        self.backoff_s = float(backoff_s)
+        self.backoff_max_s = float(backoff_max_s)
+        self.n_instances = sum(b.n_instances for b in self.backends)
+        B = len(self.backends)
+        self._lock = threading.Lock()
+        self._ex = ThreadPoolExecutor(max_workers=max(4, 2 * B))
+        self._ewma_s: list[float | None] = [None] * B  # per-POINT service time
+        self._inflight = [0] * B
+        self._fail_streak = [0] * B
+        self._backoff_until = [0.0] * B
+        self._bindings: dict[tuple, tuple[int, ...]] = {}
+        self._rr = 0  # round-robin cursor
+        self.router_stats = self._fresh_stats()
+
+    def _fresh_stats(self) -> dict:
+        B = len(self.backends)
+        return {
+            "waves": 0,
+            "points": [0] * B,
+            "waves_per_backend": [0] * B,
+            "failures": [0] * B,
+            "steals": 0,
+            "last_imbalance": None,
+            "imbalance_ewma": None,
+        }
+
+    # -- config bindings -----------------------------------------------------
+    def bind(self, config: dict | None, backends: Sequence[int]):
+        """Restrict waves carrying `config` to the given backend indices."""
+        idx = tuple(sorted(set(int(i) for i in backends)))
+        if not idx or any(i < 0 or i >= len(self.backends) for i in idx):
+            raise ValueError(f"invalid backend subset {backends!r}")
+        self._bindings[config_key(config)] = idx
+
+    def _allowed(self, config) -> list[int]:
+        return list(
+            self._bindings.get(config_key(config), range(len(self.backends)))
+        )
+
+    # -- routing plan --------------------------------------------------------
+    def _throughput(self, i: int) -> float:
+        """Estimated points/sec. The EWMA records wall/points per shard, so
+        it already reflects the backend's INTERNAL parallelism (a 2-instance
+        pool halves its per-point wall) — no n_instances factor here, or
+        multi-instance backends would be double-counted. Unknown backends
+        get the fastest known EWMA (optimistic, so new backends are probed
+        rather than starved)."""
+        e = self._ewma_s[i]
+        if e is None:
+            known = [x for x in self._ewma_s if x is not None]
+            e = min(known) if known else 1e-3
+        return 1.0 / max(e, 1e-9)
+
+    def _plan(self, N: int, config) -> list[tuple[int, int]]:
+        """[(backend_idx, n_points)] for a wave of N points (caller holds no
+        lock; planning state is read under the router lock)."""
+        with self._lock:
+            allowed = self._allowed(config)
+            now = time.monotonic()
+            live = [i for i in allowed if self._backoff_until[i] <= now]
+            if not live:  # every allowed backend backed off: try them anyway
+                live = allowed
+            if self.policy == "round_robin":
+                counts = {i: 0 for i in live}
+                order = sorted(live)
+                for j in range(N):
+                    counts[order[(self._rr + j) % len(order)]] += 1
+                self._rr = (self._rr + N) % len(order)
+                return [(i, c) for i, c in counts.items() if c > 0]
+            thr = {i: self._throughput(i) for i in live}
+            total = sum(thr.values())
+            counts = {i: int(N * thr[i] / total) for i in live}
+            # JSQ tie-break: spill the remainder (and sub-backend-count
+            # waves) onto the backend with the lowest projected queue time
+            for _ in range(N - sum(counts.values())):
+                i = min(
+                    live,
+                    key=lambda j: (self._inflight[j] + counts[j] + 1) / thr[j],
+                )
+                counts[i] += 1
+            return [(i, c) for i, c in counts.items() if c > 0]
+
+    # -- dispatch ------------------------------------------------------------
+    def _run_shard(self, i: int, thetas: np.ndarray, config) -> tuple[np.ndarray, float, int]:
+        """Evaluate one shard on backend i, failing over on error. Returns
+        (rows, wall_s, final_backend_idx)."""
+        tried: set[int] = set()
+        n = len(thetas)
+        while True:
+            tried.add(i)
+            with self._lock:
+                self._inflight[i] += n
+            t0 = time.monotonic()
+            try:
+                out = np.atleast_2d(
+                    np.asarray(self.backends[i].evaluate(thetas, config))
+                )
+                if out.shape[0] != n:
+                    out = out.T
+                wall = time.monotonic() - t0
+                with self._lock:
+                    self._inflight[i] -= n
+                    self._fail_streak[i] = 0
+                    per_point = wall / n
+                    e = self._ewma_s[i]
+                    self._ewma_s[i] = (
+                        per_point if e is None else 0.7 * e + 0.3 * per_point
+                    )
+                    self.router_stats["points"][i] += n
+                    self.router_stats["waves_per_backend"][i] += 1
+                return out, wall, i
+            except Exception as err:  # noqa: BLE001 — backend failure
+                with self._lock:
+                    self._inflight[i] -= n
+                    self._fail_streak[i] += 1
+                    self.router_stats["failures"][i] += 1
+                    self._backoff_until[i] = time.monotonic() + min(
+                        self.backoff_s * 2 ** (self._fail_streak[i] - 1),
+                        self.backoff_max_s,
+                    )
+                    allowed = self._allowed(config)
+                    alive = [j for j in allowed if j not in tried]
+                if not alive:
+                    raise RuntimeError(
+                        f"router: all {len(tried)} eligible backends failed "
+                        f"for this shard; last: {err!r}"
+                    ) from err
+                with self._lock:
+                    self.router_stats["steals"] += 1
+                    now = time.monotonic()
+                    ok = [j for j in alive if self._backoff_until[j] <= now]
+                    i = min(
+                        ok or alive,
+                        key=lambda j: (self._inflight[j] + n) / self._throughput(j),
+                    )
+
+    def evaluate(self, thetas, config):
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        N = len(thetas)
+        plan = self._plan(N, config)
+        bounds = np.cumsum([0] + [c for _, c in plan])
+        futs = [
+            self._ex.submit(self._run_shard, i, thetas[bounds[j]:bounds[j + 1]], config)
+            for j, (i, _) in enumerate(plan)
+        ]
+        shards = [f.result() for f in futs]
+        rows = np.concatenate([s[0] for s in shards], axis=0)
+        # imbalance factor: the wave's actual wall time (slowest shard) over
+        # the ideal wall time had the observed per-point costs been split
+        # perfectly — 1.0 means no backend sat idle waiting on a straggler
+        if len(shards) > 1:
+            walls = [s[1] for s in shards]
+            # observed shard throughput (points/sec, internal parallelism
+            # included) — the basis for the perfectly-balanced ideal
+            speeds = [c / max(s[1], 1e-9) for s, (_, c) in zip(shards, plan)]
+            ideal = N / max(sum(speeds), 1e-9)
+            imb = max(walls) / max(ideal, 1e-9)
+            with self._lock:
+                self.router_stats["last_imbalance"] = round(imb, 3)
+                e = self.router_stats["imbalance_ewma"]
+                self.router_stats["imbalance_ewma"] = round(
+                    imb if e is None else 0.7 * e + 0.3 * imb, 3
+                )
+        with self._lock:
+            self.router_stats["waves"] += 1
+        return rows
+
+    # -- telemetry / lifecycle ----------------------------------------------
+    def reset_stats(self):
+        """Zero the traffic counters while KEEPING the learned EWMA service
+        times — benchmarks call this after warm-up waves so reported shares
+        and imbalance reflect the steady state, not the cold probe."""
+        with self._lock:
+            self.router_stats = self._fresh_stats()
+
+    def stats(self) -> dict:
+        with self._lock:
+            rs = {
+                k: (list(v) if isinstance(v, list) else v)
+                for k, v in self.router_stats.items()
+            }
+            ewma = list(self._ewma_s)
+            backed = [
+                max(0.0, round(t - time.monotonic(), 3))
+                for t in self._backoff_until
+            ]
+        total = sum(rs["points"]) or 1
+        per_backend = [
+            {
+                "kind": b.name,
+                "points": rs["points"][i],
+                "waves": rs["waves_per_backend"][i],
+                "share": round(rs["points"][i] / total, 3),
+                "failures": rs["failures"][i],
+                "ewma_point_s": None if ewma[i] is None else round(ewma[i], 5),
+                "backoff_remaining_s": backed[i],
+                **b.stats(),
+            }
+            for i, b in enumerate(self.backends)
+        ]
+        return {
+            "kind": self.name,
+            "policy": self.policy,
+            "n_backends": len(self.backends),
+            "waves": rs["waves"],
+            "steals": rs["steals"],
+            "last_imbalance": rs["last_imbalance"],
+            "imbalance_ewma": rs["imbalance_ewma"],
+            "per_backend": per_backend,
+        }
+
+    def close(self):
+        self._ex.shutdown(wait=False)
+        for b in self.backends:
+            b.close()
+
+
 def as_backend(obj) -> FabricBackend:
-    """Coerce pools / models / urls / callables into a FabricBackend."""
+    """Coerce pools / models / urls / callables into a FabricBackend; a
+    list/tuple containing backends or pools becomes a `FabricRouter` over
+    them (heterogeneous multi-backend dispatch)."""
     if isinstance(obj, FabricBackend):
         return obj
     if isinstance(obj, ModelPool):
@@ -252,6 +521,10 @@ def as_backend(obj) -> FabricBackend:
     if isinstance(obj, (list, tuple)):
         from repro.core.client import HTTPModel
 
+        # heterogeneous cluster: any element that is already a backend (or a
+        # pool) makes the list a router over N independent backends
+        if any(isinstance(o, (FabricBackend, ModelPool, ThreadedPool)) for o in obj):
+            return FabricRouter(obj)
         if all(isinstance(o, (str, HTTPModel)) for o in obj):
             return HTTPBackend(obj)
         return ThreadedBackend(ThreadedPool(list(obj)))
@@ -287,7 +560,8 @@ class EvaluationFabric:
 
     Parameters
     ----------
-    backend : anything `as_backend` accepts.
+    backend : anything `as_backend` accepts; a list of backends/pools builds
+        a `FabricRouter` over the heterogeneous cluster.
     max_batch : initial wave-size cap for the submit path (adapts upward when
         waves saturate; default 4 x backend instances).
     linger_s : initial collector linger window (self-tunes when adaptive).
@@ -317,6 +591,7 @@ class EvaluationFabric:
         self._pending: list[tuple[np.ndarray, dict | None, Future, tuple]] = []
         self._stop = False
         self._wave_latency_ewma: float | None = None
+        self._labels: dict[tuple, str] = {}
         self.stats = {
             "waves": 0,
             "points": 0,
@@ -328,9 +603,42 @@ class EvaluationFabric:
             # len(wave)/max_batch, explicit evaluate_batch waves are full by
             # definition (they bypass the collector cap)
             "fill_sum": 0.0,
+            # per-label traffic breakdown (see `label_config`) — multilevel
+            # hierarchies label their level configs so per-level telemetry
+            # surfaces here without a separate accounting layer
+            "per_label": {},
         }
         self._thread = threading.Thread(target=self._collector, daemon=True)
         self._thread.start()
+
+    # -- labels / routing ----------------------------------------------------
+    def label_config(self, config: dict | None, label: str):
+        """Attribute traffic carrying `config` to `label` in the telemetry
+        (`stats["per_label"][label]` = points / waves / cache hits+misses)."""
+        with self._lock:
+            self._labels[config_key(config)] = str(label)
+            self.stats["per_label"].setdefault(
+                str(label),
+                {"points": 0, "waves": 0, "cache_hits": 0, "cache_misses": 0},
+            )
+
+    def _label_bump(self, config, **inc):  # caller holds the lock
+        label = self._labels.get(config_key(config))
+        if label is None:
+            return
+        bucket = self.stats["per_label"][label]
+        for k, v in inc.items():
+            bucket[k] += v
+
+    def bind(self, config: dict | None, backends: Sequence[int]):
+        """Restrict waves carrying `config` to a backend subset (requires a
+        `FabricRouter` backend — see `FabricRouter.bind`)."""
+        if not isinstance(self.backend, FabricRouter):
+            raise TypeError(
+                "bind() needs a multi-backend fabric (FabricRouter); "
+                f"this fabric runs a single {self.backend.name!r} backend"
+            )
+        self.backend.bind(config, backends)
 
     # -- cache --------------------------------------------------------------
     def _key(self, theta: np.ndarray, config: dict | None) -> tuple:
@@ -366,6 +674,7 @@ class EvaluationFabric:
             hit = self._cache_get(key)
             if hit is not None:
                 self.stats["cache_hits"] += 1
+                self._label_bump(config, cache_hits=1)
                 fut: Future = Future()
                 fut.set_result(hit.copy())
                 return fut
@@ -374,6 +683,7 @@ class EvaluationFabric:
                 self.stats["coalesced"] += 1
                 return _derived_future(inflight)
             self.stats["cache_misses"] += 1
+            self._label_bump(config, cache_misses=1)
             fut = Future()
             self._inflight[key] = fut
             self._pending.append((theta, config, fut, key))
@@ -409,10 +719,12 @@ class EvaluationFabric:
                 hit = self._cache_get(key)
                 if hit is not None:
                     self.stats["cache_hits"] += 1
+                    self._label_bump(config, cache_hits=1)
                     rows[i] = hit
                     continue
                 if key in miss_rows:
                     self.stats["cache_hits"] += 1  # intra-batch duplicate
+                    self._label_bump(config, cache_hits=1)
                     continue
                 inflight = self._inflight.get(key)
                 if inflight is not None:
@@ -420,6 +732,7 @@ class EvaluationFabric:
                     wait_futs[key] = inflight
                     continue
                 self.stats["cache_misses"] += 1
+                self._label_bump(config, cache_misses=1)
                 miss_rows[key] = len(miss_order)
                 miss_order.append(key)
                 miss_thetas.append(thetas[i])
@@ -444,6 +757,7 @@ class EvaluationFabric:
                 self.stats["points"] += len(miss_order)
                 self.stats["direct_batches"] += 1
                 self.stats["fill_sum"] += 1.0
+                self._label_bump(config, points=len(miss_order), waves=1)
                 for k, out in zip(miss_order, outs):
                     self._cache_put(k, out)
                     fut = self._inflight.pop(k, None)
@@ -492,6 +806,7 @@ class EvaluationFabric:
                     if outs.shape[0] != len(items):
                         outs = outs.T
                     with self._lock:
+                        self._label_bump(items[0][1], points=len(items), waves=1)
                         for (_, _, fut, key), out in zip(items, outs):
                             self._cache_put(key, out)
                             self._inflight.pop(key, None)
@@ -525,6 +840,7 @@ class EvaluationFabric:
     # -- telemetry / lifecycle ----------------------------------------------
     def telemetry(self) -> dict:
         s = dict(self.stats)
+        s["per_label"] = {k: dict(v) for k, v in s["per_label"].items()}
         looked_up = s["cache_hits"] + s["cache_misses"]
         s["cache_hit_rate"] = s["cache_hits"] / looked_up if looked_up else 0.0
         s["mean_wave_size"] = s["points"] / s["waves"] if s["waves"] else 0.0
@@ -540,6 +856,12 @@ class EvaluationFabric:
         if "busy_s" in back and back.get("evaluations"):
             n_inst = max(1, self.backend.n_instances)
             s["busy_fraction_hint"] = back["busy_s"] / n_inst
+        if back.get("kind") == "router":
+            # fold the router's headline numbers into the flat stats so
+            # benchmarks read them without digging into the backend tree
+            s["router_steals"] = back["steals"]
+            s["router_imbalance"] = back["imbalance_ewma"]
+            s["backend_share"] = [b["share"] for b in back["per_backend"]]
         return s
 
     def shutdown(self):

@@ -185,20 +185,33 @@ class ThreadedPool:
                     req.future.set_result(np.asarray(out[0]))
                 self.stats["evaluations"] += 1
             except Exception as e:  # noqa: BLE001 — instance failure
-                if req.consume_attempt(self.max_retries):
+                if self._stop.is_set() or not req.consume_attempt(self.max_retries):
+                    # no retry budget left — or the pool is stopping, where a
+                    # re-queued request could land after the shutdown drain
+                    # and strand its caller
+                    if not req.future.done():
+                        req.future.set_exception(e)
+                else:
                     self.stats["retries"] += 1
                     self._q.put(req)
-                elif not req.future.done():
-                    req.future.set_exception(e)
             finally:
                 self.stats["busy_s"][idx] += time.monotonic() - t0
                 self._q.task_done()
 
     # -- API ----------------------------------------------------------------
     def submit(self, theta, config: dict | None = None) -> Future:
+        if self._stop.is_set():
+            # fail fast instead of queueing work no worker will ever take —
+            # a dead pool behind a FabricRouter must RAISE so the router can
+            # back it off and steal the shard onto a live backend
+            raise RuntimeError("ThreadedPool is shut down")
         fut: Future = Future()
         req = _Request(list(np.asarray(theta, float).ravel()), config, fut)
         self._q.put(req)
+        if self._stop.is_set() and not fut.done():
+            # shutdown raced the put: the drain may already have run, so no
+            # worker (and no drain) will ever resolve this future — fail it
+            fut.set_exception(RuntimeError("ThreadedPool is shut down"))
         if self.deadline_s is not None:
             def respawn():
                 if not fut.done():
@@ -256,6 +269,16 @@ class ThreadedPool:
         self._stop.set()
         for t in self._threads:
             t.join(timeout=1.0)
+        # drain the queue: requests stranded behind the stop flag would hang
+        # their callers forever (mid-flight kill during router failover) —
+        # fail them so waves in progress surface the death immediately
+        while True:
+            try:
+                req = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if not req.future.done():
+                req.future.set_exception(RuntimeError("ThreadedPool shut down"))
 
     def __enter__(self):
         return self

@@ -4,7 +4,9 @@
 variant is used by tests and by `ThreadedPool`-over-HTTP setups to emulate
 the paper's k8s pods on one host. Beyond protocol 1.0 it serves the batched
 `/EvaluateBatch` extension (N points per round-trip) used by the
-EvaluationFabric HTTP backend.
+EvaluationFabric HTTP backend, and a GET `/Health` liveness probe used by
+`repro.core.client.register_servers` when enrolling a cluster of servers
+behind a `FabricRouter`.
 """
 from __future__ import annotations
 
@@ -39,6 +41,22 @@ def _make_handler(models: dict[str, Model]):
         def do_GET(self):  # noqa: N802
             if self.path.rstrip("/") in ("", "/Info".rstrip("/"), "/Info"):
                 self._send({"protocolVersion": PROTOCOL_VERSION, "models": list(models)})
+            elif self.path.rstrip("/") == "/Health":
+                # liveness probe for multi-server registration: routers ping
+                # this before enrolling a server in the backend cluster
+                self._send(
+                    {
+                        "status": "ok",
+                        "protocolVersion": PROTOCOL_VERSION,
+                        "models": list(models),
+                        "batch": {
+                            name: bool(
+                                getattr(m, "supports_evaluate_batch", lambda: False)()
+                            )
+                            for name, m in models.items()
+                        },
+                    }
+                )
             else:
                 self._send(error_body("NotFound", self.path), 404)
 

@@ -93,8 +93,14 @@ def batched_logpost(
 
     # model points actually evaluated (prior-masked proposals never reach
     # the model) — benchmarks report honest evals/sec from these
-    logpost.points_evaluated = 0
-    logpost.waves = 0
+    def reset():
+        """Zero the wave/point counters (benchmarks call this after warm-up
+        so jit compilation never counts toward measured throughput)."""
+        logpost.points_evaluated = 0
+        logpost.waves = 0
+
+    logpost.reset = reset
+    logpost.reset()
     return logpost
 
 

@@ -8,6 +8,15 @@ acceptance at level l uses the two-level DA ratio
     alpha = min{1, [pi_l(x') pi_{l-1}(x)] / [pi_l(x) pi_{l-1}(x')]}.
 
 `logposts[l]` maps theta -> log posterior density at level l (coarsest = 0).
+
+Two dispatch disciplines:
+
+* `mlda` — one chain, one model round-trip per subchain step (optionally
+  through an `EvaluationFabric` for caching/wave-coalescing);
+* `ensemble_mlda` — K chains in LOCKSTEP: every coarse-subchain step and
+  every fine acceptance test across all K chains is ONE `evaluate_batch`
+  wave (reusing `uq.mcmc.batched_logpost`), so the sampling cost is ~tens
+  of waves instead of thousands of round-trips.
 """
 from __future__ import annotations
 
@@ -16,7 +25,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.uq.mcmc import ChainResult
+from repro.uq.mcmc import ChainResult, batched_logpost
 
 
 @dataclass
@@ -24,6 +33,31 @@ class MLDAResult:
     samples: np.ndarray  # [n, d] finest-level samples
     accept_rates: list  # per level
     evals_per_level: list
+
+
+@dataclass
+class EnsembleMLDAResult:
+    """K lockstep MLDA chains: every subchain step and every acceptance test
+    is ONE `evaluate_batch` wave across all K chains."""
+
+    samples: np.ndarray  # [K, n, d] finest-level samples
+    accept_rates: list  # per level, aggregated over chains
+    evals_per_level: list  # logpost evaluations per level (all chains)
+    n_waves: int  # batched model dispatches for the whole ensemble
+
+    @property
+    def samples_flat(self) -> np.ndarray:
+        """[K * n, d] pooled finest-level samples."""
+        return self.samples.reshape(-1, self.samples.shape[-1])
+
+    def chains(self) -> list[MLDAResult]:
+        """Per-chain view, interchangeable with `mlda` output (accept rates
+        and eval counts are ensemble aggregates)."""
+        return [
+            MLDAResult(self.samples[k], list(self.accept_rates),
+                       list(self.evals_per_level))
+            for k in range(len(self.samples))
+        ]
 
 
 def fabric_logposts(
@@ -95,10 +129,16 @@ class _LevelSampler:
         y = x.copy()
         lp_y_coarse = self._lp(level - 1, y)
         lp_start_coarse = lp_y_coarse
+        # track acceptances rather than comparing states: a subchain that
+        # wanders and returns to (numerically) x is a REAL proposal with its
+        # own coarse ratio — `np.allclose(y, x)` false-positived on it and
+        # skipped the fine acceptance test entirely
+        moved = False
         for _ in range(sub):
-            y, lp_y_coarse, _ = self.propose(level - 1, y, lp_y_coarse)
-        if np.allclose(y, x):
-            # subchain never moved; proposal == current state
+            y, lp_y_coarse, accepted = self.propose(level - 1, y, lp_y_coarse)
+            moved = moved or accepted
+        if not moved:
+            # no subchain proposal was accepted; proposal == current state
             return x, lp_x, False
         lp_prop = self._lp(level, y)
         self.tot[level] += 1
@@ -151,6 +191,136 @@ def mlda(
         for l in range(len(logposts))
     ]
     return MLDAResult(out, rates, list(sampler.evals))
+
+
+def batched_level_logposts(
+    fabric,
+    loglik: Callable[[np.ndarray], float],
+    level_configs: Sequence[dict | None],
+    logprior: Callable[[np.ndarray], float] | None = None,
+) -> list[Callable]:
+    """Per-level BATCHED log-posteriors ([M, d] -> [M]) for `ensemble_mlda`,
+    routed through an `EvaluationFabric` (reuses `uq.mcmc.batched_logpost`:
+    prior-masked points never reach the model, waves hit the fabric cache/
+    router). Coarsest level first, as in `fabric_logposts`."""
+    return [batched_logpost(fabric, loglik, logprior, c) for c in level_configs]
+
+
+class _EnsembleLevelSampler:
+    """Recursive DA sampler advancing K chains in LOCKSTEP: one step at any
+    level costs one [<=K, d] model wave, never K round-trips."""
+
+    def __init__(self, logpost_batches, subsampling, prop_cov, rng, K):
+        self.logposts = list(logpost_batches)
+        self.subsampling = list(subsampling)
+        self.rng = rng
+        self.K = K
+        self.L = len(self.logposts)
+        self.chol = np.linalg.cholesky(np.atleast_2d(prop_cov))
+        self.d = self.chol.shape[0]
+        self.acc = np.zeros(self.L)
+        self.tot = np.zeros(self.L)
+        self.evals = [0] * self.L
+        self.waves = 0
+
+    def _lp(self, level: int, xs: np.ndarray) -> np.ndarray:
+        """[M, d] -> [M] in ONE wave."""
+        self.evals[level] += len(xs)
+        self.waves += 1
+        return np.asarray(self.logposts[level](xs), float).ravel()
+
+    def step(self, level: int, xs: np.ndarray, lps: np.ndarray):
+        """One lockstep step at `level` for all K chains.
+        Returns (xs, lps, accepted[K] bool)."""
+        K = len(xs)
+        if level == 0:
+            props = xs + self.rng.standard_normal((K, self.d)) @ self.chol.T
+            lp_props = self._lp(0, props)
+            self.tot[0] += K
+            accept = np.log(self.rng.uniform(size=K)) < lp_props - lps
+            self.acc[0] += accept.sum()
+            xs = np.where(accept[:, None], props, xs)
+            lps = np.where(accept, lp_props, lps)
+            return xs, lps, accept
+        # K coarse subchains advanced in lockstep, started from xs
+        sub = self.subsampling[level - 1]
+        ys = xs.copy()
+        lp_ys_coarse = self._lp(level - 1, ys)  # cache-served when fabric-backed
+        lp_start_coarse = lp_ys_coarse.copy()
+        moved = np.zeros(K, bool)  # any subchain proposal accepted, per chain
+        for _ in range(sub):
+            ys, lp_ys_coarse, acc = self.step(level - 1, ys, lp_ys_coarse)
+            moved |= acc
+        accept = np.zeros(K, bool)
+        if moved.any():
+            # fine acceptance test for ALL moved chains in ONE wave; chains
+            # whose subchain never accepted keep their state without paying
+            # a fine evaluation
+            lp_props = np.full(K, -np.inf)
+            lp_props[moved] = self._lp(level, ys[moved])
+            self.tot[level] += int(moved.sum())
+            log_alpha = np.full(K, -np.inf)
+            log_alpha[moved] = (lp_props[moved] - lps[moved]) - (
+                lp_ys_coarse[moved] - lp_start_coarse[moved]
+            )
+            accept = moved & (np.log(self.rng.uniform(size=K)) < log_alpha)
+            self.acc[level] += accept.sum()
+            xs = np.where(accept[:, None], ys, xs)
+            lps = np.where(accept, lp_props, lps)
+        return xs, lps, accept
+
+
+def ensemble_mlda(
+    logpost_batches: Sequence[Callable] | None,
+    x0s: np.ndarray,
+    n_samples: int,
+    subsampling: Sequence[int],
+    prop_cov: np.ndarray,
+    rng: np.random.Generator,
+    *,
+    fabric=None,
+    level_configs: Sequence[dict | None] | None = None,
+    loglik: Callable | None = None,
+    logprior: Callable | None = None,
+) -> EnsembleMLDAResult:
+    """K MLDA chains advanced in LOCKSTEP (paper §4.3 at fabric scale).
+
+    Where `mlda` + `run_chains` issues one model round-trip per subchain
+    step per chain, the ensemble turns each coarse-subchain step and each
+    fine-level acceptance test across all K chains into ONE
+    `evaluate_batch` wave — the paper's 1400-coarse/800-fine budget runs as
+    ~tens of waves instead of thousands of round-trips. Per-chain kernels
+    are the standard MLDA recursion (independent randomness per chain), so
+    each chain's law matches `mlda`.
+
+    `logpost_batches[l]`: [M, d] -> [M] at level l (coarsest first) — or
+    pass `fabric=` with `level_configs=`/`loglik=` (and optional
+    `logprior=`) to build them via `batched_level_logposts`.
+    `x0s`: [K, d] initial states (one per chain)."""
+    if fabric is not None:
+        assert loglik is not None and level_configs is not None, (
+            "fabric= requires loglik= and level_configs="
+        )
+        logpost_batches = batched_level_logposts(
+            fabric, loglik, level_configs, logprior
+        )
+    assert len(subsampling) == len(logpost_batches) - 1
+    xs = np.atleast_2d(np.asarray(x0s, float)).copy()
+    K, d = xs.shape
+    sampler = _EnsembleLevelSampler(
+        logpost_batches, subsampling, prop_cov, rng, K
+    )
+    top = len(logpost_batches) - 1
+    lps = sampler._lp(top, xs)
+    out = np.empty((K, n_samples, d))
+    for i in range(n_samples):
+        xs, lps, _ = sampler.step(top, xs, lps)
+        out[:, i] = xs
+    rates = [
+        float(sampler.acc[l] / sampler.tot[l]) if sampler.tot[l] else 0.0
+        for l in range(len(logpost_batches))
+    ]
+    return EnsembleMLDAResult(out, rates, list(sampler.evals), sampler.waves)
 
 
 def delayed_acceptance(

@@ -1,0 +1,464 @@
+"""FabricRouter + multilevel-aware routing + lockstep ensemble MLDA tests:
+latency-weighted dispatch, failover/steal/backoff, config->backend bindings,
+MultilevelModel as a fabric citizen, MLDA cache interaction, and the
+subchain-returned-to-x acceptance fix."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.fabric import (
+    CallableBackend,
+    EvaluationFabric,
+    FabricRouter,
+    ThreadedBackend,
+    as_backend,
+)
+from repro.core.hierarchy import MultilevelModel
+from repro.core.interface import Model
+from repro.core.pool import ThreadedPool
+from repro.uq.mlda import _LevelSampler, ensemble_mlda, mlda
+
+
+def _square_backend(cost_per_point: float = 0.0, fail: bool = False):
+    """Batched callable backend: sum-of-squares rows, optional per-point
+    cost (sleep) and optional hard failure."""
+
+    def f(thetas):
+        if fail:
+            raise RuntimeError("backend down")
+        if cost_per_point:
+            time.sleep(cost_per_point * len(thetas))
+        return (np.asarray(thetas) ** 2).sum(axis=1, keepdims=True)
+
+    return CallableBackend(f)
+
+
+# -- coercion -----------------------------------------------------------------
+
+
+def test_as_backend_list_of_backends_builds_router():
+    r = as_backend([_square_backend(), _square_backend()])
+    assert isinstance(r, FabricRouter)
+    assert r.n_instances == 2
+    with pytest.raises(ValueError):
+        FabricRouter([])
+    with pytest.raises(ValueError):
+        FabricRouter([_square_backend()], policy="best_effort")
+
+
+def test_fabric_accepts_backend_list():
+    with EvaluationFabric([_square_backend(), _square_backend()],
+                          cache_size=0) as fab:
+        X = np.random.default_rng(0).standard_normal((9, 3))
+        np.testing.assert_allclose(
+            fab.evaluate_batch(X).ravel(), (X**2).sum(1), rtol=1e-6
+        )
+        t = fab.telemetry()
+        assert t["backend"]["kind"] == "router"
+        assert abs(sum(t["backend_share"]) - 1.0) < 1e-6
+
+
+# -- latency-aware weighting --------------------------------------------------
+
+
+def test_router_shifts_share_away_from_slow_backend():
+    router = FabricRouter([_square_backend(0.001), _square_backend(0.004)])
+    fab = EvaluationFabric(router, cache_size=0)
+    rng = np.random.default_rng(1)
+    try:
+        for _ in range(5):
+            X = rng.standard_normal((24, 2))
+            np.testing.assert_allclose(
+                fab.evaluate_batch(X).ravel(), (X**2).sum(1), rtol=1e-6
+            )
+        s = router.stats()
+        shares = [b["share"] for b in s["per_backend"]]
+        # the 4x-slower backend must receive well under half the points
+        assert shares[0] > 0.6 and shares[1] < 0.4, shares
+        assert s["imbalance_ewma"] is not None
+    finally:
+        fab.shutdown()
+
+
+def test_round_robin_policy_splits_evenly():
+    router = FabricRouter(
+        [_square_backend(0.001), _square_backend(0.004)], policy="round_robin"
+    )
+    fab = EvaluationFabric(router, cache_size=0)
+    rng = np.random.default_rng(2)
+    try:
+        for _ in range(4):
+            fab.evaluate_batch(rng.standard_normal((20, 2)))
+        shares = [b["share"] for b in router.stats()["per_backend"]]
+        assert abs(shares[0] - 0.5) < 0.05, shares
+    finally:
+        fab.shutdown()
+
+
+def test_router_reset_stats_keeps_learned_ewma():
+    router = FabricRouter([_square_backend(0.001), _square_backend(0.004)])
+    fab = EvaluationFabric(router, cache_size=0)
+    try:
+        fab.evaluate_batch(np.random.default_rng(0).standard_normal((12, 2)))
+        assert router._ewma_s[0] is not None
+        router.reset_stats()
+        assert router.router_stats["waves"] == 0
+        assert sum(router.router_stats["points"]) == 0
+        assert router._ewma_s[0] is not None  # learned latency survives
+    finally:
+        fab.shutdown()
+
+
+def test_single_point_waves_prefer_shortest_queue():
+    """Sub-backend-count waves go to ONE backend (JSQ), not a 1-point shard
+    on every backend."""
+    router = FabricRouter([_square_backend(), _square_backend()])
+    fab = EvaluationFabric(router, cache_size=0)
+    try:
+        fab.evaluate_batch([[1.0, 2.0]])
+        s = router.router_stats
+        assert sorted(s["points"]) == [0, 1]
+    finally:
+        fab.shutdown()
+
+
+# -- failover / backoff -------------------------------------------------------
+
+
+def test_router_failover_mid_wave_steals_to_live_backend():
+    good = _square_backend()
+    bad = _square_backend(fail=True)
+    router = FabricRouter([good, bad], backoff_s=0.05)
+    fab = EvaluationFabric(router, cache_size=0)
+    try:
+        X = np.random.default_rng(3).standard_normal((10, 2))
+        out = fab.evaluate_batch(X)
+        np.testing.assert_allclose(out.ravel(), (X**2).sum(1), rtol=1e-6)
+        s = router.stats()
+        assert s["steals"] >= 1
+        assert s["per_backend"][1]["failures"] >= 1
+        assert s["per_backend"][1]["backoff_remaining_s"] > 0
+        # while backed off, the dead backend receives no traffic
+        before = router.router_stats["points"][1]
+        fab.evaluate_batch(X + 1.0)
+        assert router.router_stats["points"][1] == before
+    finally:
+        fab.shutdown()
+
+
+def test_router_raises_when_all_backends_fail():
+    router = FabricRouter(
+        [_square_backend(fail=True), _square_backend(fail=True)]
+    )
+    fab = EvaluationFabric(router, cache_size=0)
+    try:
+        with pytest.raises(RuntimeError, match="all .* backends failed"):
+            fab.evaluate_batch([[1.0, 2.0], [3.0, 4.0]])
+    finally:
+        fab.shutdown()
+
+
+def test_router_failover_on_threaded_pool_killed_mid_run():
+    """The CI smoke in miniature: one of two ThreadedPools is shut down
+    between waves; the router must finish every wave on the survivor."""
+    pools = [
+        ThreadedPool([_SleepModel(0.002) for _ in range(2)]),
+        ThreadedPool([_SleepModel(0.002) for _ in range(2)]),
+    ]
+    router = FabricRouter([ThreadedBackend(p) for p in pools], backoff_s=0.05)
+    fab = EvaluationFabric(router, cache_size=0)
+    rng = np.random.default_rng(4)
+    try:
+        fab.evaluate_batch(rng.standard_normal((8, 2)))
+        pools[1].shutdown()  # the mid-benchmark kill
+        for _ in range(3):
+            X = rng.standard_normal((8, 2))
+            out = fab.evaluate_batch(X)
+            np.testing.assert_allclose(out.ravel(), (X**2).sum(1), rtol=1e-6)
+        assert router.stats()["steals"] >= 1
+    finally:
+        fab.shutdown()
+
+
+class _SleepModel(Model):
+    def __init__(self, cost_s: float):
+        super().__init__("forward")
+        self.cost_s = cost_s
+
+    def get_input_sizes(self, c=None):
+        return [2]
+
+    def get_output_sizes(self, c=None):
+        return [1]
+
+    def supports_evaluate(self):
+        return True
+
+    def __call__(self, p, c=None):
+        time.sleep(self.cost_s)
+        return [[float(np.sum(np.square(p[0])))]]
+
+
+def test_threaded_pool_raises_after_shutdown():
+    pool = ThreadedPool([_SleepModel(0.0)])
+    pool.evaluate([[1.0, 2.0]])
+    pool.shutdown()
+    with pytest.raises(RuntimeError, match="shut down"):
+        pool.submit([1.0, 2.0])
+
+
+# -- config -> backend bindings -----------------------------------------------
+
+
+def test_bind_restricts_config_to_backend_subset():
+    a, b = _square_backend(), _square_backend()
+    router = FabricRouter([a, b])
+    router.bind({"level": 0}, [0])
+    router.bind({"level": 1}, [1])
+    fab = EvaluationFabric(router, cache_size=0)
+    rng = np.random.default_rng(5)
+    try:
+        fab.evaluate_batch(rng.standard_normal((6, 2)), {"level": 0})
+        assert router.router_stats["points"] == [6, 0]
+        fab.evaluate_batch(rng.standard_normal((4, 2)), {"level": 1})
+        assert router.router_stats["points"] == [6, 4]
+    finally:
+        fab.shutdown()
+    with pytest.raises(ValueError):
+        router.bind({"level": 2}, [5])
+
+
+def test_fabric_bind_requires_router():
+    with EvaluationFabric(_square_backend(), cache_size=0) as fab:
+        with pytest.raises(TypeError, match="FabricRouter"):
+            fab.bind({"level": 0}, [0])
+
+
+# -- MultilevelModel as a fabric citizen --------------------------------------
+
+
+def _level_model(thetas, config):
+    lvl = (config or {}).get("level", 0)
+    return ((np.asarray(thetas) - lvl) ** 2).sum(1, keepdims=True)
+
+
+def test_multilevel_fabric_binding_and_telemetry():
+    fab = EvaluationFabric(
+        [CallableBackend(_level_model), CallableBackend(_level_model)],
+        cache_size=64,
+    )
+    ml = MultilevelModel(
+        fabric=fab,
+        configs=[{"level": 0}, {"level": 1}],
+        level_backends={0: [0], 1: [0, 1]},
+    )
+    try:
+        x = np.array([2.0])
+        assert float(ml.evaluate(0, x)[0]) == 4.0
+        assert float(ml.evaluate(1, x)[0]) == 1.0
+        out = ml.evaluate_batch(1, np.array([[2.0], [3.0], [2.0]]))
+        np.testing.assert_allclose(out.ravel(), [1.0, 4.0, 1.0])
+        rep = ml.report()
+        assert rep["counts"] == [1, 4]
+        levels = rep["fabric_levels"]
+        assert levels["level0"]["points"] == 1
+        # repeated theta at level 1 served by the cache, not the backend
+        assert levels["level1"]["cache_hits"] >= 2
+        assert levels["level1"]["points"] == 2
+        assert "backend_share" in rep["router"]
+    finally:
+        fab.shutdown()
+
+
+def test_multilevel_requires_levels_or_fabric():
+    with pytest.raises(ValueError):
+        MultilevelModel()
+
+
+def test_multilevel_plain_batch_path_unchanged():
+    ml = MultilevelModel(
+        [lambda th: np.atleast_1d(float(np.sum(th))),
+         lambda th: np.atleast_1d(2.0 * float(np.sum(th)))]
+    )
+    out = ml.evaluate_batch(1, np.array([[1.0, 2.0], [3.0, 4.0]]))
+    np.testing.assert_allclose(out.ravel(), [6.0, 14.0])
+    assert ml.counts == [0, 2]
+
+
+# -- ensemble MLDA ------------------------------------------------------------
+
+
+def _mk_logpost_model(counter):
+    def model(thetas, config):
+        counter["points"] += len(thetas)
+        counter["waves"] += 1
+        shift = -0.5 if (config or {}).get("level") == 0 else 1.0
+        return ((np.asarray(thetas) - shift) ** 2).sum(1, keepdims=True)
+
+    return model
+
+
+def test_ensemble_mlda_matches_single_chain_statistics():
+    """K lockstep chains target the same posterior as `mlda`: compare
+    moments on a tractable 2-level problem."""
+    counter = {"points": 0, "waves": 0}
+    fab = EvaluationFabric(_mk_logpost_model(counter), cache_size=4096)
+    try:
+        K = 12
+        rng = np.random.default_rng(0)
+        x0s = rng.standard_normal((K, 2)) * 0.3 + 1.0
+        res = ensemble_mlda(
+            None, x0s, 250, [4], 0.7 * np.eye(2), rng,
+            fabric=fab, loglik=lambda y: -0.5 * float(y[0]),
+            level_configs=[{"level": 0}, {"level": 1}],
+        )
+        assert res.samples.shape == (K, 250, 2)
+        assert res.samples_flat.shape == (K * 250, 2)
+        assert len(res.chains()) == K
+        pooled = res.samples[:, 100:, :].reshape(-1, 2)
+    finally:
+        fab.shutdown()
+
+    fab2 = EvaluationFabric(_mk_logpost_model({"points": 0, "waves": 0}),
+                            cache_size=4096)
+    try:
+        ref = mlda(
+            None, np.ones(2), 2500, [4], 0.7 * np.eye(2),
+            np.random.default_rng(1),
+            fabric=fab2, loglik=lambda y: -0.5 * float(y[0]),
+            level_configs=[{"level": 0}, {"level": 1}],
+        )
+    finally:
+        fab2.shutdown()
+    np.testing.assert_allclose(
+        pooled.mean(0), ref.samples[500:].mean(0), atol=0.25
+    )
+    # acceptance behaviour in the same regime on both levels
+    assert abs(res.accept_rates[0] - ref.accept_rates[0]) < 0.1
+    assert abs(res.accept_rates[1] - ref.accept_rates[1]) < 0.15
+
+
+def test_ensemble_mlda_wave_economics():
+    """Every subchain step across K chains is ONE wave: the wave count must
+    be independent of K (per step), and orders of magnitude below the
+    per-point round-trip count."""
+    counter = {"points": 0, "waves": 0}
+    fab = EvaluationFabric(_mk_logpost_model(counter), cache_size=0)
+    try:
+        K, n, sub = 16, 30, 4
+        rng = np.random.default_rng(2)
+        res = ensemble_mlda(
+            None, rng.standard_normal((K, 2)), n, [sub], 0.7 * np.eye(2),
+            rng, fabric=fab, loglik=lambda y: -0.5 * float(y[0]),
+            level_configs=[{"level": 0}, {"level": 1}],
+        )
+        total_evals = int(np.sum(res.evals_per_level))
+        assert total_evals > K * n  # K chains' worth of evaluations...
+        # ... in <= (1 init + n * (1 coarse-init + sub coarse + 1 fine)) waves
+        assert res.n_waves <= 1 + n * (sub + 2)
+        assert counter["waves"] <= res.n_waves
+    finally:
+        fab.shutdown()
+
+
+def test_ensemble_mlda_fabric_cache_dedupes_coarse_states():
+    """DA subchains re-evaluate their start state at the coarse level; the
+    fabric cache must serve those across the ensemble instead of the model
+    (the MLDA + cache interaction the tentpole promises)."""
+
+    def run(cache_size):
+        counter = {"points": 0, "waves": 0}
+        fab = EvaluationFabric(_mk_logpost_model(counter), cache_size=cache_size)
+        try:
+            rng = np.random.default_rng(3)
+            res = ensemble_mlda(
+                None, rng.standard_normal((8, 2)), 60, [3], 0.7 * np.eye(2),
+                rng, fabric=fab, loglik=lambda y: -0.5 * float(y[0]),
+                level_configs=[{"level": 0}, {"level": 1}],
+            )
+            hits = fab.stats["cache_hits"]
+        finally:
+            fab.shutdown()
+        return res, counter["points"], hits
+
+    res_raw, pts_raw, hits_raw = run(cache_size=0)
+    res_cached, pts_cached, hits_cached = run(cache_size=8192)
+    # identical chains (cache changes WHERE values come from, not the values)
+    np.testing.assert_allclose(res_cached.samples, res_raw.samples)
+    assert res_cached.evals_per_level == res_raw.evals_per_level
+    assert pts_cached < pts_raw  # repeated coarse states never reached it
+    assert hits_cached > hits_raw
+
+
+def test_ensemble_mlda_through_router():
+    """Ensemble waves split across a heterogeneous 2-backend cluster."""
+
+    def mk(cost):
+        def f(thetas, config):
+            time.sleep(cost * len(thetas))
+            shift = -0.5 if (config or {}).get("level") == 0 else 1.0
+            return ((np.asarray(thetas) - shift) ** 2).sum(1, keepdims=True)
+
+        return CallableBackend(f)
+
+    router = FabricRouter([mk(0.0002), mk(0.0008)])
+    fab = EvaluationFabric(router, cache_size=4096)
+    try:
+        rng = np.random.default_rng(4)
+        res = ensemble_mlda(
+            None, rng.standard_normal((8, 2)), 40, [3], 0.7 * np.eye(2),
+            rng, fabric=fab, loglik=lambda y: -0.5 * float(y[0]),
+            level_configs=[{"level": 0}, {"level": 1}],
+        )
+        assert res.samples.shape == (8, 40, 2)
+        pts = router.router_stats["points"]
+        assert sum(pts) > 0 and pts[0] > pts[1]  # slow backend got less
+    finally:
+        fab.shutdown()
+
+
+# -- subchain returned-to-x regression (satellite fix) ------------------------
+
+
+class _ScriptedRNG:
+    """Deterministic stand-in for np.random.Generator: pops scripted draws."""
+
+    def __init__(self, normals, uniforms):
+        self.normals = list(normals)
+        self.uniforms = list(uniforms)
+
+    def standard_normal(self, size=None):
+        v = self.normals.pop(0)
+        return np.asarray(v, float)
+
+    def uniform(self, size=None):
+        return float(self.uniforms.pop(0))
+
+
+def test_subchain_wandering_back_to_x_still_runs_fine_acceptance():
+    """A 2-step coarse subchain that accepts +1 then accepts -1 ends exactly
+    at x. The old `np.allclose(y, x)` shortcut mistook that for 'never
+    moved' and skipped the fine acceptance test; the fix tracks acceptances,
+    so the fine level must be consulted exactly once."""
+    evals = {"fine": 0}
+
+    def lp_coarse(x):
+        return 0.0  # flat: every coarse proposal accepted (u ~ 0)
+
+    def lp_fine(x):
+        evals["fine"] += 1
+        return 0.0
+
+    rng = _ScriptedRNG(
+        normals=[[1.0], [-1.0]],  # +1 then back by -1: y == x exactly
+        uniforms=[1e-12, 1e-12, 1e-12],  # accept everything
+    )
+    sampler = _LevelSampler([lp_coarse, lp_fine], [2], np.eye(1), rng)
+    x = np.zeros(1)
+    y, lp_y, accepted = sampler.propose(1, x, lp_fine(x))
+    assert evals["fine"] == 2  # initial lp + the acceptance-test evaluation
+    assert sampler.tot[1] == 1  # the fine acceptance test RAN
+    assert accepted  # flat posterior, log-alpha = 0 > log(1e-12)
+    np.testing.assert_array_equal(y, x)  # the accepted proposal IS x
