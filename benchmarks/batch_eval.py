@@ -4,7 +4,8 @@ The tentpole measurement for the batched hot path: N thetas through (a) the
 per-point path every UQ framework pays (one host round-trip per point, the
 UQpy/QUEENS dispatch tax) and (b) ONE native `evaluate_batch` wave. Also
 demonstrates the fabric's native-batch telemetry: waves dispatched to a
-`supports_evaluate_batch` model never shatter into per-point fallback calls.
+batch-capable model (`capabilities().evaluate_batch`) never shatter into
+per-point fallback calls.
 """
 from __future__ import annotations
 

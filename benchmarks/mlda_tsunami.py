@@ -17,7 +17,7 @@ import numpy as np
 
 from repro.apps.tsunami import TsunamiModel
 from repro.core.fabric import EvaluationFabric, ModelBackend
-from repro.core.interface import Model
+from repro.core.interface import Model, model_capabilities
 from repro.core.pool import ThreadedPool
 from repro.uq.gp import GP
 from repro.uq.mcmc import (
@@ -58,9 +58,8 @@ class _RemoteModel(Model):
         self.inner = inner
         self.latency_s = latency_s
         self.slowdown = float(slowdown)
-        self._native = native and bool(
-            getattr(inner, "supports_evaluate_batch", lambda: False)()
-        )
+        self._inner_caps = model_capabilities(inner)
+        self._native = native and self._inner_caps.evaluate_batch
         self.batch_bucket = getattr(inner, "batch_bucket", False)
 
     def get_input_sizes(self, c=None):
@@ -69,11 +68,19 @@ class _RemoteModel(Model):
     def get_output_sizes(self, c=None):
         return self.inner.get_output_sizes(c)
 
-    def supports_evaluate(self):
-        return True
+    def capabilities(self, config=None):
+        # forward the inner surface; the legacy-cluster emulation (native=
+        # False) hides the batched variants, like a pre-extension server
+        if self._native:
+            return self._inner_caps
+        from repro.core.interface import Capabilities
 
-    def supports_evaluate_batch(self):
-        return self._native
+        return Capabilities(
+            evaluate=True,
+            gradient=self._inner_caps.gradient,
+            apply_jacobian=self._inner_caps.apply_jacobian,
+            apply_hessian=self._inner_caps.apply_hessian,
+        )
 
     def __call__(self, p, c=None):
         t0 = time.monotonic()
@@ -94,6 +101,31 @@ class _RemoteModel(Model):
         if self.slowdown > 1.0:
             time.sleep((self.slowdown - 1.0) * (time.monotonic() - t0))
         return out
+
+    def _timed_inner(self, call):
+        t0 = time.monotonic()
+        if self.latency_s:
+            time.sleep(self.latency_s)
+        out = call()
+        if self.slowdown > 1.0:
+            time.sleep((self.slowdown - 1.0) * (time.monotonic() - t0))
+        return out
+
+    def gradient_batch(self, thetas, senss, config=None):
+        # one derivative wave = one cluster round-trip, like evaluate waves
+        return self._timed_inner(
+            lambda: self.inner.gradient_batch(thetas, senss, config)
+        )
+
+    def apply_jacobian_batch(self, thetas, vecs, config=None):
+        return self._timed_inner(
+            lambda: self.inner.apply_jacobian_batch(thetas, vecs, config)
+        )
+
+    def value_and_gradient_batch(self, thetas, sens_fn, config=None):
+        return self._timed_inner(
+            lambda: self.inner.value_and_gradient_batch(thetas, sens_fn, config)
+        )
 
 
 def build_hierarchy(n_gp_train: int = 128, seed: int = 3, cluster_latency_s: float = 0.0):

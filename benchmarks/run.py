@@ -59,6 +59,11 @@ def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
         derived = f"speedup={out['speedup']:.1f};evals={out['total_evals']}"
     elif name.startswith("qmc"):
         derived = f"online_speedup={out['online_speedup']:.1f};relerr={out['rom_max_relerr']:.1e}"
+    elif name.startswith("grad_mcmc"):
+        derived = (f"mala_ess_per_wave={out['mala']['ess_per_wave']:.2f};"
+                   f"rwm_ess_per_wave={out['rwm']['ess_per_wave']:.2f};"
+                   f"ratio={out['ess_per_wave_ratio']:.2f}x")
+        rate = out["mala"]["evals_per_sec"]
     elif name.startswith("mlda"):
         derived = f"speedup={out['speedup']:.1f};evals={out['evals_per_level']}"
         if isinstance(out, dict) and "ensemble" in out:
@@ -90,6 +95,7 @@ def main() -> None:
 
     from benchmarks import (
         batch_eval,
+        grad_mcmc,
         mlda_tsunami,
         qmc_defects,
         roofline,
@@ -103,6 +109,7 @@ def main() -> None:
         ("sparse_grid_l2sea_sec4.1", sparse_grid_l2sea.main),
         ("qmc_defects_sec4.2", qmc_defects.main),
         ("mlda_tsunami_sec4.3", mlda_tsunami.main),
+        ("grad_mcmc_mala", grad_mcmc.main),
         ("roofline", roofline.main),
     ]
     for name, fn in benches:

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interface import Model, next_pow2, pad_to_bucket
+from repro.core.interface import Capabilities, Model, next_pow2, pad_to_bucket
 
 # grid: nx cells across the width (plies), ny along the length
 NX, NY = 48, 96
@@ -68,6 +68,52 @@ def _pristine_field() -> tuple[np.ndarray, np.ndarray]:
     """Pristine (defect off-domain) conductivities, computed once — `online`
     used to rebuild them on every call just to locate changed cells."""
     return coefficient_field(np.array([0.0, 0.0, 0.0]))
+
+
+#: default smoothing width (in the ellipse's normalized r^2 units) for the
+#: differentiable defect indicator; config key "defect_softness" overrides
+DEFECT_SOFTNESS = 1.0
+
+
+def coefficient_field_smooth(theta: jax.Array, softness: float | jax.Array):
+    """Differentiable (kx, ky): the hard ellipse indicator `r2 <= 1` of
+    `coefficient_field` is replaced by sigmoid((1 - r2)/softness), so the
+    strain energy becomes smooth in theta and reverse-mode AD yields useful
+    defect-placement gradients (the hard indicator is piecewise constant —
+    its a.e. derivative is zero, which tells a sampler nothing). As
+    softness -> 0 the field converges to the hard one."""
+    x = jnp.asarray((np.arange(NX) + 0.5) * WIDTH_MM / NX)
+    y = jnp.asarray((np.arange(NY) + 0.5) * LENGTH_MM / NY)
+    kx0, ky0 = _pristine_field()
+    pw, pl = theta[0], theta[1]
+    diam = jnp.maximum(theta[2], 1e-3)
+    r2 = ((x[:, None] - pw) / (diam / 2)) ** 2 + ((y[None, :] - pl) / (diam / 2)) ** 2
+    m = jax.nn.sigmoid((1.0 - r2) / softness)
+    inter = np.zeros((NX, 1))
+    inter[NX // 2 - 1: NX // 2 + 1] = 1.0  # resin interlayer rows
+    factor = 1.0 - (1.0 - DEFECT_SOFTENING) * m * jnp.asarray(inter)
+    return jnp.asarray(kx0) * factor, jnp.asarray(ky0) * factor
+
+
+@jax.jit
+def _smooth_energy_batch(thetas: jax.Array, softness) -> jax.Array:
+    """[K, 3] -> [K]: vmapped FULL solves on the smooth defect field —
+    the differentiable end-to-end program (CG gradients flow through
+    `lax.custom_linear_solve`'s implicit transpose solve)."""
+
+    def one(theta):
+        kx, ky = coefficient_field_smooth(theta, softness)
+        return solve_full(kx, ky)[0]
+
+    return jax.vmap(one)(thetas)
+
+
+@jax.jit
+def _smooth_vjp_batch(thetas: jax.Array, senss: jax.Array, softness):
+    """[K, 3] x [K, 1] -> ([K], [K, 3]): fused primal + VJP of the smooth
+    full model, ONE jitted dispatch per wave."""
+    y, vjp = jax.vjp(lambda th: _smooth_energy_batch(th, softness), thetas)
+    return y, vjp(jnp.asarray(senss, y.dtype).ravel())[0]
 
 
 def _harmonic(a, b):
@@ -330,7 +376,16 @@ def _full_energy_batch(kx: jax.Array, ky: jax.Array) -> jax.Array:
 
 class CompositeModel(Model):
     """UM-Bridge model: theta (3) -> strain energy (1).
-    config: {"mode": "rom" (default) | "full"}."""
+    config: {"mode": "rom" (default) | "full",
+             "defect_softness": 0 (hard ellipse indicator, default) | s > 0
+             (smooth sigmoid indicator of width s — the differentiable
+             variant; full mode only)}.
+
+    Capability-typed v2 surface: gradients are advertised for both modes —
+    full mode differentiates the smooth defect field end to end through the
+    CG solve (reverse-mode AD), ROM mode falls back to the base class's
+    relative-step finite differences over one batched evaluate wave (the
+    online basis rebuild is host-side and non-differentiable)."""
 
     #: chunk width for `evaluate_batch` — bounds the [K, ndof, nred] basis
     #: stack (~3 MB/theta) while keeping the batched matmuls wide
@@ -349,19 +404,27 @@ class CompositeModel(Model):
     def get_output_sizes(self, config=None):
         return [1]
 
-    def supports_evaluate(self):
-        return True
+    def capabilities(self, config=None) -> Capabilities:
+        return Capabilities(
+            evaluate=True, evaluate_batch=True,
+            gradient=True, gradient_batch=True,
+        )
 
-    def supports_evaluate_batch(self):
-        return True
+    @staticmethod
+    def _softness(config) -> float:
+        return float((config or {}).get("defect_softness", 0.0))
 
     def __call__(self, parameters, config=None):
         theta = np.asarray(parameters[0], float)
         mode = (config or {}).get("mode", "rom")
         if mode == "full":
+            soft = self._softness(config)
+            self.stats["full"] += 1
+            if soft > 0.0:
+                e = _smooth_energy_batch(jnp.asarray(theta[None, :]), soft)[0]
+                return [[float(e)]]
             kx, ky = coefficient_field(theta)
             e, _ = solve_full(jnp.asarray(kx), jnp.asarray(ky))
-            self.stats["full"] += 1
             return [[float(e)]]
         e, _ = self.rom.online(theta)
         self.stats["rom"] += 1
@@ -378,9 +441,13 @@ class CompositeModel(Model):
         N = len(thetas)
         self.stats[mode] += N
         energies = np.empty(N)
+        soft = self._softness(config)
         for lo in range(0, N, self.BATCH_CHUNK):
             part = thetas[lo : lo + self.BATCH_CHUNK]
-            if mode == "full":
+            if mode == "full" and soft > 0.0:
+                pt, _ = pad_to_bucket(part, next_pow2(len(part)))
+                e = _smooth_energy_batch(jnp.asarray(pt), soft)
+            elif mode == "full":
                 ks = [coefficient_field(t) for t in part]
                 kx = np.stack([k[0] for k in ks])
                 ky = np.stack([k[1] for k in ks])
@@ -398,3 +465,36 @@ class CompositeModel(Model):
                 e = _rom_energy_batch(jnp.asarray(fx), jnp.asarray(fy), jnp.asarray(B))
             energies[lo : lo + len(part)] = np.asarray(e, float)[: len(part)]
         return energies[:, None]
+
+    # -- batched derivative surface -----------------------------------------
+    def gradient(self, out_wrt, in_wrt, parameters, sens, config=None):
+        theta = np.asarray(parameters[in_wrt], float)
+        return self.gradient_batch(
+            theta[None, :], np.asarray(sens, float)[None, :], config
+        )[0].tolist()
+
+    def gradient_batch(self, thetas, senss, config=None) -> np.ndarray:
+        """[N, 3] x [N, 1] -> [N, 3]. Full mode: reverse-mode AD through the
+        SMOOTH defect field and the CG solve in one fused vmapped dispatch
+        (softness defaults to `DEFECT_SOFTNESS` when the config carries the
+        hard indicator — gradients of a piecewise-constant map are zero a.e.
+        and useless, so the smooth surrogate defines them). ROM mode: the
+        base class's relative-step FD fallback over one evaluate wave."""
+        mode = (config or {}).get("mode", "rom")
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        senss = np.atleast_2d(np.asarray(senss, float))
+        if mode != "full":
+            return self._fd_gradient_batch(thetas, senss, config)
+        soft = self._softness(config) or DEFECT_SOFTNESS
+        N = len(thetas)
+        self.stats["full"] += N
+        grads = np.empty((N, 3))
+        for lo in range(0, N, self.BATCH_CHUNK):
+            part = thetas[lo: lo + self.BATCH_CHUNK]
+            spart = senss[lo: lo + self.BATCH_CHUNK]
+            bucket = next_pow2(len(part))
+            pt, _ = pad_to_bucket(part, bucket)
+            ps, _ = pad_to_bucket(spart, bucket)
+            _, g = _smooth_vjp_batch(jnp.asarray(pt), jnp.asarray(ps), soft)
+            grads[lo: lo + len(part)] = np.asarray(g, float)[: len(part)]
+        return grads

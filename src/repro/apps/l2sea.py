@@ -75,6 +75,23 @@ class L2SeaModel(JAXModel):
             time.sleep(self.eval_cost_s)
         return super().evaluate_batch(thetas, config)
 
+    def gradient_batch(self, thetas, senss, config=None):
+        # derivative waves pay the same one-latency-per-wave cost model:
+        # the adjoint solve runs on the same (emulated) cluster instance
+        if self.eval_cost_s:
+            time.sleep(self.eval_cost_s)
+        return super().gradient_batch(thetas, senss, config)
+
+    def apply_jacobian_batch(self, thetas, vecs, config=None):
+        if self.eval_cost_s:
+            time.sleep(self.eval_cost_s)
+        return super().apply_jacobian_batch(thetas, vecs, config)
+
+    def value_and_gradient_batch(self, thetas, sens_fn, config=None):
+        if self.eval_cost_s:
+            time.sleep(self.eval_cost_s)
+        return super().value_and_gradient_batch(thetas, sens_fn, config)
+
 
 def make_inputs(y: np.ndarray) -> np.ndarray:
     """SGMK-snippet analogue: pad the 2 active params with 14 zeros."""

@@ -3,12 +3,17 @@
     model = HTTPModel("http://localhost:4242", "forward")
     print(model([[0.0, 10.0]]))
 
-`evaluate_batch` ships N points in one `/EvaluateBatch` round-trip (falling
-back to per-point `/Evaluate` against servers that predate the extension);
-`round_trips` counts HTTP requests so benchmarks can report the saving.
-`register_servers` probes a cluster of server URLs via GET `/Health` and
-returns one fabric backend per live server, ready for `FabricRouter`
-load balancing.
+`HTTPModel` negotiates the operation surface ONCE from `/ModelInfo` (the
+server's `Capabilities` descriptor) and never probes endpoints after that:
+`evaluate_batch` ships N points in one `/EvaluateBatch` round-trip,
+`gradient_batch`/`apply_jacobian_batch` ship whole derivative waves through
+`/GradientBatch`/`/ApplyJacobianBatch`, and each degrades per capability —
+batched route -> per-point route -> (for derivatives) the base-class
+finite-difference fallback riding `/EvaluateBatch` — against servers that
+predate an extension. `round_trips` counts HTTP requests so benchmarks can
+report the saving. `register_servers` probes a cluster of server URLs via
+GET `/Health` and returns one fabric backend per live server, ready for
+`FabricRouter` load balancing.
 """
 from __future__ import annotations
 
@@ -17,8 +22,8 @@ import urllib.request
 
 import numpy as np
 
-from repro.core.interface import Model
-from repro.core.protocol import ModelSupport, config_key, error_body, split_blocks
+from repro.core.interface import Capabilities, Model
+from repro.core.protocol import config_key, error_body, split_blocks
 
 
 def _post(url: str, path: str, body: dict, timeout: float = 60.0) -> dict:
@@ -77,8 +82,9 @@ def register_servers(
     """Probe each server's `/Health` and enroll the live ones as independent
     fabric backends — ONE `HTTPBackend` per server, so a `FabricRouter` (or
     `EvaluationFabric(register_servers(urls))`) load-balances across the
-    cluster with per-server latency tracking and failover, instead of the
-    static contiguous split a single multi-client `HTTPBackend` does.
+    cluster with per-server latency tracking, capability-aware routing and
+    failover, instead of the static contiguous split a single multi-client
+    `HTTPBackend` does.
 
     Dead servers are skipped (raise with `require_all=True`); registering
     zero live servers always raises."""
@@ -112,40 +118,60 @@ class HTTPModel(Model):
         self.round_trips = 0  # HTTP requests issued (telemetry)
         self._sizes_cache: dict = {}  # config_key -> input sizes (static per config)
         info = self._rpc("/ModelInfo", {"name": name}, timeout=10.0)
-        self._support = ModelSupport.from_json(info.get("support", {}))
+        self._caps = Capabilities.from_json(info.get("support", {}))
         # servers that advertise EvaluateBatch skip the endpoint probe; the
         # rest are probed on first use (protocol-1.0 servers lack the route)
-        self._batch_supported: bool | None = True if self._support.evaluate_batch else None
+        self._batch_supported: bool | None = True if self._caps.evaluate_batch else None
+        # derivative-wave routes: pre-capability servers may still serve
+        # /GradientBatch (the route predates the advertisement), so probe
+        # lazily unless the capability set settles it
+        self._grad_batch_supported: bool | None = (
+            True if self._caps.gradient_batch else None
+        )
+        self._jvp_batch_supported: bool | None = (
+            True if self._caps.apply_jacobian_batch else None
+        )
 
     def _rpc(self, path: str, body: dict, timeout: float | None = None) -> dict:
         self.round_trips += 1
         return _post(self.url, path, body, timeout or self.timeout)
 
     def get_input_sizes(self, config=None):
-        return self._rpc("/InputSizes", {"name": self.name, "config": config or {}})["inputSizes"]
+        # cached per config: sizes are static, and the per-point fallback
+        # loops (base-class gradient/jacobian delegation) call this per wave
+        return self._input_sizes_cached(config)
 
     def get_output_sizes(self, config=None):
         return self._rpc("/OutputSizes", {"name": self.name, "config": config or {}})["outputSizes"]
 
+    # -- capability surface --------------------------------------------------
+    def capabilities(self, config=None) -> Capabilities:
+        """The server's advertised surface (fetched once from `/ModelInfo`).
+        What the remote advertises is what dispatch layers negotiate on —
+        a client-side FD fallback never widens the advertisement."""
+        return self._caps
+
     def supports_evaluate(self):
-        return self._support.evaluate
+        return self._caps.evaluate
 
     def supports_gradient(self):
-        return self._support.gradient
+        return self._caps.gradient
 
     def supports_apply_jacobian(self):
-        return self._support.apply_jacobian
+        return self._caps.apply_jacobian
 
     def supports_apply_hessian(self):
-        return self._support.apply_hessian
+        return self._caps.apply_hessian
 
     def supports_evaluate_batch(self):
         """True when the remote serves /EvaluateBatch from a native batched
         program — the whole wave then costs ONE round-trip AND one SPMD
         dispatch on the server, so dispatch layers treat this client as a
-        native batch model."""
-        return self._support.evaluate_batch
+        native batch model. (Deprecated probe; read
+        `capabilities().evaluate_batch`.)"""
+        return self._caps.evaluate_batch
 
+    # -- operations ----------------------------------------------------------
     def __call__(self, parameters, config=None):
         body = {"name": self.name, "input": [list(map(float, p)) for p in parameters], "config": config or {}}
         return self._rpc("/Evaluate", body)["output"]
@@ -171,15 +197,20 @@ class HTTPModel(Model):
                 self._batch_supported = False
         # per-point fallback: un-flatten each theta into the model's input
         # blocks (mirrors the server-side /EvaluateBatch splitting)
-        ck = config_key(config)
-        if ck not in self._sizes_cache:
-            self._sizes_cache[ck] = self.get_input_sizes(config)
-        sizes = self._sizes_cache[ck]
+        sizes = self._input_sizes_cached(config)
         rows = []
         for t in thetas:
             out = self(split_blocks(t, sizes), config)
             rows.append(np.concatenate([np.asarray(blk, float) for blk in out]))
         return np.asarray(rows)
+
+    def _input_sizes_cached(self, config) -> list[int]:
+        ck = config_key(config)
+        if ck not in self._sizes_cache:
+            self._sizes_cache[ck] = self._rpc(
+                "/InputSizes", {"name": self.name, "config": config or {}}
+            )["inputSizes"]
+        return self._sizes_cache[ck]
 
     def gradient(self, out_wrt, in_wrt, parameters, sens, config=None):
         body = {
@@ -189,6 +220,33 @@ class HTTPModel(Model):
         }
         return self._rpc("/Gradient", body)["output"]
 
+    def gradient_batch(self, thetas, senss, config=None) -> np.ndarray:
+        """[N, n] x [N, m] -> [N, n] in ONE `/GradientBatch` round-trip,
+        degrading per the negotiated capability set: batched route ->
+        per-point `/Gradient` loop -> finite-difference fallback over
+        `/EvaluateBatch` when the server has no gradient at all."""
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        senss = np.atleast_2d(np.asarray(senss, float))
+        if self._grad_batch_supported is not False:
+            body = {
+                "name": self.name,
+                "inputs": [list(map(float, t)) for t in thetas],
+                "senss": [list(map(float, s)) for s in senss],
+                "config": config or {},
+            }
+            try:
+                out = self._rpc("/GradientBatch", body)
+                self._grad_batch_supported = True
+                return np.asarray(out["outputs"], float)
+            except RuntimeError as e:
+                if not any(k in str(e) for k in ("NotFound", "UnsupportedFeature")):
+                    raise
+                self._grad_batch_supported = False
+        if not self._caps.op_supported("gradient"):
+            return self._fd_gradient_batch(thetas, senss, config)
+        # per-point /Gradient loop == the base class's gradient delegation
+        return Model.gradient_batch(self, thetas, senss, config)
+
     def apply_jacobian(self, out_wrt, in_wrt, parameters, vec, config=None):
         body = {
             "name": self.name, "outWrt": out_wrt, "inWrt": in_wrt,
@@ -196,6 +254,31 @@ class HTTPModel(Model):
             "vec": list(map(float, vec)), "config": config or {},
         }
         return self._rpc("/ApplyJacobian", body)["output"]
+
+    def apply_jacobian_batch(self, thetas, vecs, config=None) -> np.ndarray:
+        """[N, n] x [N, n] -> [N, m]: one `/ApplyJacobianBatch` round-trip,
+        with the same capability-negotiated degradation as `gradient_batch`."""
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        vecs = np.atleast_2d(np.asarray(vecs, float))
+        if self._jvp_batch_supported is not False:
+            body = {
+                "name": self.name,
+                "inputs": [list(map(float, t)) for t in thetas],
+                "vecs": [list(map(float, v)) for v in vecs],
+                "config": config or {},
+            }
+            try:
+                out = self._rpc("/ApplyJacobianBatch", body)
+                self._jvp_batch_supported = True
+                return np.asarray(out["outputs"], float)
+            except RuntimeError as e:
+                if not any(k in str(e) for k in ("NotFound", "UnsupportedFeature")):
+                    raise
+                self._jvp_batch_supported = False
+        if not self._caps.op_supported("apply_jacobian"):
+            return self._fd_apply_jacobian_batch(thetas, vecs, config)
+        # per-point /ApplyJacobian loop == the base class's delegation
+        return Model.apply_jacobian_batch(self, thetas, vecs, config)
 
     def apply_hessian(self, out_wrt, in_wrt1, in_wrt2, parameters, sens, vec, config=None):
         body = {

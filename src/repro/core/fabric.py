@@ -10,41 +10,68 @@ them behind one async-capable API:
     fabric = EvaluationFabric(backend)      # pool / model / url(s) / callable
     fut  = fabric.submit(theta, config)     # per-point, batched transparently
     ys   = fabric.evaluate_batch(thetas, config)  # vectorized fast path
+    gs   = fabric.gradient_batch(thetas, senss, config)   # batched VJP wave
+    ys, gs = fabric.value_and_gradient_batch(thetas, sens_fn, config)
 
 with
 
   * pluggable backends — SPMD `ModelPool`, `ThreadedPool`, `HTTPModel`
     fan-out over several servers (one `/EvaluateBatch` round-trip each),
     any UM-Bridge `Model`, or a plain batched callable;
+  * CAPABILITY-TYPED dispatch — every backend advertises a `Capabilities`
+    descriptor (evaluate / gradient / apply_jacobian / apply_hessian, each
+    with a batched variant); derivative waves route only to backends that
+    advertise the capability, and asking an evaluate-only fabric for a
+    gradient raises `UnsupportedCapability` up front instead of failing
+    mid-wave;
   * heterogeneous clusters — a LIST of backends becomes a `FabricRouter`:
     latency-aware weighted dispatch (EWMA service time, join-shortest-queue
     tie-break) with per-backend failure backoff and retry-on-another-backend,
-    so mixed SPMD/threaded/HTTP resources serve one fabric;
+    so mixed SPMD/threaded/HTTP resources serve one fabric — and a stolen
+    gradient shard only lands on another gradient-capable backend;
   * adaptive batching — per-point submits are packed into waves; the linger
     window and max wave size self-tune from observed wave latency;
-  * an LRU result cache keyed on `(theta.tobytes(), config)` — dedupes the
-    repeated coarse-level evaluations MLDA/DA subchains generate, and
-    coalesces identical in-flight requests into one backend call;
+  * an LRU result cache NAMESPACED PER CAPABILITY — keys carry the operation
+    plus its extra operand (sens/vec), so a gradient at theta never serves
+    an evaluate at theta (and vice versa); dedupes the repeated coarse-level
+    evaluations MLDA/DA subchains generate and coalesces identical in-flight
+    requests into one backend call;
   * per-backend telemetry — waves, points, padding waste, busy fraction,
-    cache hits — so benchmarks can report the paper's efficiency numbers.
+    cache hits, and a per-capability wave/point split — so benchmarks can
+    report the paper's efficiency numbers and gradient-sampler economics.
 
-Every UQ driver (`run_chains`, `mlda`, `cub_qmc_sobol`, sparse grids) accepts
-a fabric wherever it accepted a bare callable.
+Every UQ driver (`run_chains`, `mlda`, `cub_qmc_sobol`, sparse grids, and the
+gradient-based `ensemble_mala`/`ensemble_hmc`) accepts a fabric wherever it
+accepted a bare callable.
 """
 from __future__ import annotations
 
 import inspect
 import threading
 import time
+import warnings
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.interface import JAXModel, Model, next_pow2, pad_to_bucket
+from repro.core.interface import (
+    Capabilities,
+    JAXModel,
+    Model,
+    UnsupportedCapability,
+    model_capabilities,
+    next_pow2,
+    pad_to_bucket,
+)
 from repro.core.pool import ModelPool, ThreadedPool
 from repro.core.protocol import config_key, split_blocks
+
+#: capability families a fabric wave can carry; "value_and_gradient" is the
+#: fused forward+VJP wave (an in-process optimization of the gradient
+#: family — it needs no wire capability of its own)
+WAVE_OPS = ("evaluate", "gradient", "apply_jacobian", "value_and_gradient")
 
 
 # ---------------------------------------------------------------------------
@@ -53,13 +80,33 @@ from repro.core.protocol import config_key, split_blocks
 
 
 class FabricBackend:
-    """A batched evaluation target: [N, n] -> [N, m] under one config."""
+    """A batched evaluation target: [N, n] -> [N, m] under one config, plus
+    optional derivative waves, advertised through `capabilities()`."""
 
     name = "backend"
     n_instances = 1
+    #: True when the backend can serve a fused value+gradient wave in ONE
+    #: dispatch (in-process AD models); the fabric otherwise splits fused
+    #: requests into an evaluate wave and a gradient wave
+    fused_value_grad = False
+
+    def capabilities(self) -> Capabilities:
+        # every backend is a batched evaluation target by construction
+        return Capabilities(evaluate=True, evaluate_batch=True)
 
     def evaluate(self, thetas: np.ndarray, config: dict | None) -> np.ndarray:
         raise NotImplementedError
+
+    def dispatch(self, op: str, thetas: np.ndarray, extra, config: dict | None):
+        """Run one wave of capability `op`. `extra` is the second operand:
+        None (evaluate), senss [N, m] (gradient), vecs [N, n]
+        (apply_jacobian) or a per-row sens_fn callable (value_and_gradient,
+        returning the (ys, grads) pair)."""
+        if op == "evaluate":
+            return self.evaluate(thetas, config)
+        raise UnsupportedCapability(
+            f"{self.name!r} backend advertises no {op!r} capability"
+        )
 
     def stats(self) -> dict:
         return {}
@@ -70,7 +117,7 @@ class FabricBackend:
 
 class CallableBackend(FabricBackend):
     """Wraps a plain batched callable f([N, n]) -> [N, m] (config-aware if it
-    takes a second positional argument)."""
+    takes a second positional argument). Evaluate-only by construction."""
 
     name = "callable"
 
@@ -106,25 +153,57 @@ class CallableBackend(FabricBackend):
 
 
 class SPMDBackend(FabricBackend):
-    """The TPU/SPMD path: one `ModelPool` wave per fabric wave."""
+    """The TPU/SPMD path: one `ModelPool` wave per fabric wave. Derivative
+    waves go straight to the pooled model's batched AD programs (vmapped
+    VJP/JVP, one jitted dispatch) — NOTE they are not yet mesh-sharded like
+    evaluate waves and skip the pool's instance-multiple bucketing, so on a
+    multi-device ctx mesh a gradient wave runs on the default device only
+    (per-capability sharding is a ROADMAP item)."""
 
     name = "spmd"
 
     def __init__(self, pool: ModelPool):
         self.pool = pool
         self.n_instances = pool.n_instances
+        self._caps = model_capabilities(pool.model)
+        self._op_stats: dict[str, int] = {}
+
+    def capabilities(self) -> Capabilities:
+        return self._caps
+
+    @property
+    def fused_value_grad(self) -> bool:
+        return self._caps.op_supported("gradient")
 
     def evaluate(self, thetas, config):
         return self.pool.evaluate(thetas, config)
 
+    def dispatch(self, op, thetas, extra, config):
+        if op == "evaluate":
+            return self.evaluate(thetas, config)
+        if not _backend_op_ok(self, op):
+            raise UnsupportedCapability(f"spmd backend: model advertises no {op!r}")
+        self._op_stats[op] = self._op_stats.get(op, 0) + 1
+        if op == "gradient":
+            return self.pool.model.gradient_batch(thetas, extra, config)
+        if op == "apply_jacobian":
+            return self.pool.model.apply_jacobian_batch(thetas, extra, config)
+        if op == "value_and_gradient":
+            return self.pool.model.value_and_gradient_batch(thetas, extra, config)
+        raise UnsupportedCapability(op)
+
     def stats(self):
         s = dict(self.pool.stats)
         s["kind"] = self.name
+        if self._op_stats:
+            s["derivative_waves"] = dict(self._op_stats)
         return s
 
 
 class ThreadedBackend(FabricBackend):
-    """The host-side HAProxy path: per-point dispatch to N worker threads."""
+    """The host-side HAProxy path: per-point dispatch to N worker threads.
+    Evaluate-only — single-tenant instances hold one *evaluation* in flight;
+    derivative waves belong on AD-capable backends."""
 
     name = "threaded"
 
@@ -147,25 +226,41 @@ class ThreadedBackend(FabricBackend):
 
 
 class ModelBackend(FabricBackend):
-    """Any UM-Bridge `Model`. Models that advertise `supports_evaluate_batch`
-    get whole waves as ONE native dispatch (vmapped program / single
-    `/EvaluateBatch` round-trip), with power-of-2 shape bucketing when the
-    model jits over the batch axis (`batch_bucket`) so its trace cache stays
-    bounded. Everything else goes through the per-point `evaluate_batch`
-    fallback inherited from `Model` — telemetry distinguishes the two, so
-    benchmarks can prove no wave shattered into per-point calls."""
+    """Any UM-Bridge `Model`. Models whose `Capabilities` advertise
+    `evaluate_batch` get whole waves as ONE native dispatch (vmapped program
+    / single `/EvaluateBatch` round-trip), with power-of-2 shape bucketing
+    when the model jits over the batch axis (`batch_bucket`) so its trace
+    cache stays bounded. Everything else goes through the per-point
+    `evaluate_batch` fallback inherited from `Model` — telemetry
+    distinguishes the two, so benchmarks can prove no wave shattered into
+    per-point calls. Derivative waves (`gradient`, `apply_jacobian`, fused
+    `value_and_gradient`) dispatch to the model's batched derivative surface
+    when its capability set advertises the family."""
 
     name = "model"
 
     def __init__(self, model: Model):
         self.model = model
-        self.native = bool(getattr(model, "supports_evaluate_batch", lambda: False)())
+        self.caps = model_capabilities(model)
+        self.native = self.caps.evaluate_batch
         self._stats = {
             "native_batches": 0,
             "native_points": 0,
             "fallback_points": 0,
             "padded": 0,
         }
+        self._op_stats: dict[str, int] = {}
+
+    def capabilities(self) -> Capabilities:
+        return self.caps
+
+    @property
+    def fused_value_grad(self) -> bool:
+        # any in-process Model can run the host-side sens_fn callback; fused
+        # still requires the gradient family so the VJP half is real
+        return self.caps.op_supported("gradient") and hasattr(
+            self.model, "value_and_gradient_batch"
+        )
 
     def evaluate(self, thetas, config):
         thetas = np.atleast_2d(np.asarray(thetas, float))
@@ -183,7 +278,17 @@ class ModelBackend(FabricBackend):
             self._stats["fallback_points"] += N
             return np.atleast_2d(np.asarray(self.model.evaluate_batch(thetas, config)))
         # duck-typed models outside the Model hierarchy: un-flatten each
-        # theta into input blocks and re-flatten all output blocks
+        # theta into input blocks and re-flatten all output blocks.
+        # DEPRECATED dispatch pathway (one release of back-compat): shattering
+        # a wave into bare per-point `__call__`s defeats the wave economics —
+        # implement `evaluate_batch` (the base class provides the loop).
+        warnings.warn(
+            "dispatching a wave through bare Model.__call__ per-point calls "
+            "is deprecated; give the model an evaluate_batch / Capabilities "
+            "surface instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         self._stats["fallback_points"] += N
         sizes = self.model.get_input_sizes(config)
         rows = []
@@ -192,9 +297,32 @@ class ModelBackend(FabricBackend):
             rows.append(np.concatenate([np.asarray(blk, float).ravel() for blk in out]))
         return np.asarray(rows)
 
+    def dispatch(self, op, thetas, extra, config):
+        if op == "evaluate":
+            return self.evaluate(thetas, config)
+        if not _backend_op_ok(self, op):
+            raise UnsupportedCapability(
+                f"model {getattr(self.model, 'name', '?')!r} advertises no {op!r}"
+            )
+        self._op_stats[op] = self._op_stats.get(op, 0) + 1
+        if op == "gradient":
+            return np.atleast_2d(np.asarray(
+                self.model.gradient_batch(thetas, extra, config), float
+            ))
+        if op == "apply_jacobian":
+            return np.atleast_2d(np.asarray(
+                self.model.apply_jacobian_batch(thetas, extra, config), float
+            ))
+        if op == "value_and_gradient":
+            ys, gs = self.model.value_and_gradient_batch(thetas, extra, config)
+            return np.atleast_2d(np.asarray(ys, float)), np.atleast_2d(np.asarray(gs, float))
+        raise UnsupportedCapability(op)
+
     def stats(self):
         s = {"kind": self.name, "model": getattr(self.model, "name", "?"),
              "native": self.native, **self._stats}
+        if self._op_stats:
+            s["derivative_waves"] = dict(self._op_stats)
         rt = getattr(self.model, "round_trips", None)
         if rt is not None:
             s["round_trips"] = rt
@@ -203,8 +331,11 @@ class ModelBackend(FabricBackend):
 
 class HTTPBackend(FabricBackend):
     """Fan a wave out over several UM-Bridge servers: the batch is split into
-    contiguous chunks, one `/EvaluateBatch` round-trip per server (the
-    paper's k8s replicas, minus one round-trip per *point*)."""
+    contiguous chunks, one `/EvaluateBatch` (or `/GradientBatch` /
+    `/ApplyJacobianBatch`) round-trip per server (the paper's k8s replicas,
+    minus one round-trip per *point*). The advertised capability set is the
+    INTERSECTION over the clients' — a wave must be servable by every server
+    it may shard onto."""
 
     name = "http"
 
@@ -215,17 +346,45 @@ class HTTPBackend(FabricBackend):
             c if isinstance(c, Model) else HTTPModel(str(c)) for c in clients
         ]
         self.n_instances = len(self.clients)
+        caps = model_capabilities(self.clients[0])
+        for c in self.clients[1:]:
+            caps = caps.intersection(model_capabilities(c))
+        self._caps = caps
         self._ex = ThreadPoolExecutor(max_workers=self.n_instances)
 
-    def evaluate(self, thetas, config):
+    def capabilities(self) -> Capabilities:
+        return self._caps
+
+    def _fan_out(self, thetas, call):
         thetas = np.atleast_2d(np.asarray(thetas, float))
         k = min(self.n_instances, len(thetas))
         chunks = np.array_split(np.arange(len(thetas)), k)
-        futs = [
-            self._ex.submit(self.clients[i].evaluate_batch, thetas[idx], config)
-            for i, idx in enumerate(chunks)
-        ]
+        futs = [self._ex.submit(call, self.clients[i], idx) for i, idx in enumerate(chunks)]
         return np.concatenate([np.atleast_2d(f.result()) for f in futs], axis=0)
+
+    def evaluate(self, thetas, config):
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        return self._fan_out(
+            thetas, lambda c, idx: c.evaluate_batch(thetas[idx], config)
+        )
+
+    def dispatch(self, op, thetas, extra, config):
+        if op == "evaluate":
+            return self.evaluate(thetas, config)
+        if not _backend_op_ok(self, op):
+            raise UnsupportedCapability(f"http backend: servers advertise no {op!r}")
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        extra = np.atleast_2d(np.asarray(extra, float))
+        if op == "gradient":
+            return self._fan_out(
+                thetas, lambda c, idx: c.gradient_batch(thetas[idx], extra[idx], config)
+            )
+        if op == "apply_jacobian":
+            return self._fan_out(
+                thetas,
+                lambda c, idx: c.apply_jacobian_batch(thetas[idx], extra[idx], config),
+            )
+        raise UnsupportedCapability(op)
 
     def stats(self):
         return {
@@ -237,6 +396,17 @@ class HTTPBackend(FabricBackend):
 
     def close(self):
         self._ex.shutdown(wait=False)
+
+
+def _backend_op_ok(backend: FabricBackend, op: str) -> bool:
+    """Can `backend` serve a wave of capability family `op`?"""
+    if op not in WAVE_OPS:
+        raise ValueError(f"unknown wave capability {op!r}; one of {WAVE_OPS}")
+    if op == "evaluate":
+        return True  # every fabric backend is an evaluation target
+    if op == "value_and_gradient":
+        return bool(getattr(backend, "fused_value_grad", False))
+    return backend.capabilities().op_supported(op)
 
 
 class FabricRouter(FabricBackend):
@@ -254,19 +424,30 @@ class FabricRouter(FabricBackend):
       * **join-shortest-queue tie-break** — leftover points (and whole waves
         smaller than the backend count) go to the backend with the lowest
         projected queue-time `(inflight + assigned) / throughput`;
+      * **capability-aware planning** — a wave of capability `op` only plans
+        over (and only STEALS onto) backends whose `Capabilities` advertise
+        that family; a gradient wave never lands on an evaluate-only backend,
+        and a cluster with no gradient-capable member refuses the wave with
+        `UnsupportedCapability` instead of failing inside it;
       * **failure backoff + steal** — a backend that raises mid-wave is put
         on exponential backoff and its shard is re-dispatched to another
-        backend (a "steal"); the wave completes as long as one backend lives;
+        ELIGIBLE backend (a "steal"); the wave completes as long as one
+        capable backend lives;
       * **config bindings** — `bind(config, [i, j])` restricts waves carrying
         that config to a backend subset (MLDA binds `{"level": l}` to the
         sub-cluster sized for level l);
       * **telemetry** — per-backend share / points / failures / EWMA, steal
-        count, and the wave imbalance factor (actual wave wall time over the
-        ideal perfectly-balanced wall time; 1.0 = no straggling, round-robin
-        over a 4x-slower backend gives ~2.5).
+        count, per-capability wave counts (`op_waves`), and the wave
+        imbalance factor (actual wave wall time over the ideal
+        perfectly-balanced wall time; 1.0 = no straggling, round-robin over
+        a 4x-slower backend gives ~2.5).
 
     `policy="round_robin"` disables the latency weighting (even split in
     cursor order) — kept as the explicit baseline benchmarks compare against.
+
+    The EWMA blends service times across capabilities (a gradient point
+    costs more than an evaluate point); that keeps the estimator simple and
+    still balances mixed traffic, since every backend sees the same mix.
     """
 
     name = "router"
@@ -299,6 +480,18 @@ class FabricRouter(FabricBackend):
         self._rr = 0  # round-robin cursor
         self.router_stats = self._fresh_stats()
 
+    def capabilities(self) -> Capabilities:
+        """UNION over the cluster — an op is advertised when at least one
+        member can serve it (planning restricts each wave to that subset)."""
+        caps = self.backends[0].capabilities()
+        for b in self.backends[1:]:
+            caps = caps.union(b.capabilities())
+        return caps
+
+    @property
+    def fused_value_grad(self) -> bool:
+        return any(getattr(b, "fused_value_grad", False) for b in self.backends)
+
     def _fresh_stats(self) -> dict:
         B = len(self.backends)
         return {
@@ -307,6 +500,7 @@ class FabricRouter(FabricBackend):
             "waves_per_backend": [0] * B,
             "failures": [0] * B,
             "steals": 0,
+            "op_waves": {},
             "last_imbalance": None,
             "imbalance_ewma": None,
         }
@@ -324,6 +518,18 @@ class FabricRouter(FabricBackend):
             self._bindings.get(config_key(config), range(len(self.backends)))
         )
 
+    def _eligible(self, config, op: str) -> list[int]:
+        """Backends that may carry a wave of capability `op` under `config`
+        (binding subset ∩ capability subset). Empty -> UnsupportedCapability,
+        surfaced BEFORE any dispatch."""
+        idx = [i for i in self._allowed(config) if _backend_op_ok(self.backends[i], op)]
+        if not idx:
+            raise UnsupportedCapability(
+                f"router: no backend bound to this config advertises {op!r} "
+                f"(cluster capabilities: {sorted(self.capabilities().names())})"
+            )
+        return idx
+
     # -- routing plan --------------------------------------------------------
     def _throughput(self, i: int) -> float:
         """Estimated points/sec. The EWMA records wall/points per shard, so
@@ -338,15 +544,16 @@ class FabricRouter(FabricBackend):
             e = min(known) if known else 1e-3
         return 1.0 / max(e, 1e-9)
 
-    def _plan(self, N: int, config) -> list[tuple[int, int]]:
-        """[(backend_idx, n_points)] for a wave of N points (caller holds no
-        lock; planning state is read under the router lock)."""
+    def _plan(self, N: int, config, op: str = "evaluate") -> list[tuple[int, int]]:
+        """[(backend_idx, n_points)] for a wave of N points of capability
+        `op` (caller holds no lock; planning state is read under the router
+        lock)."""
+        eligible = self._eligible(config, op)
         with self._lock:
-            allowed = self._allowed(config)
             now = time.monotonic()
-            live = [i for i in allowed if self._backoff_until[i] <= now]
-            if not live:  # every allowed backend backed off: try them anyway
-                live = allowed
+            live = [i for i in eligible if self._backoff_until[i] <= now]
+            if not live:  # every eligible backend backed off: try them anyway
+                live = eligible
             if self.policy == "round_robin":
                 counts = {i: 0 for i in live}
                 order = sorted(live)
@@ -368,9 +575,17 @@ class FabricRouter(FabricBackend):
             return [(i, c) for i, c in counts.items() if c > 0]
 
     # -- dispatch ------------------------------------------------------------
-    def _run_shard(self, i: int, thetas: np.ndarray, config) -> tuple[np.ndarray, float, int]:
-        """Evaluate one shard on backend i, failing over on error. Returns
-        (rows, wall_s, final_backend_idx)."""
+    @staticmethod
+    def _shard_extra(extra, idx_lo: int, idx_hi: int):
+        """Slice the wave's second operand to a shard: arrays shard with the
+        thetas; a sens_fn callable is shared by every shard."""
+        if extra is None or callable(extra):
+            return extra
+        return np.atleast_2d(np.asarray(extra, float))[idx_lo:idx_hi]
+
+    def _run_shard(self, op: str, i: int, thetas: np.ndarray, extra, config):
+        """Evaluate one shard on backend i, failing over on error to another
+        backend ELIGIBLE for `op`. Returns (rows, wall_s, final_backend)."""
         tried: set[int] = set()
         n = len(thetas)
         while True:
@@ -379,11 +594,14 @@ class FabricRouter(FabricBackend):
                 self._inflight[i] += n
             t0 = time.monotonic()
             try:
-                out = np.atleast_2d(
-                    np.asarray(self.backends[i].evaluate(thetas, config))
-                )
-                if out.shape[0] != n:
-                    out = out.T
+                out = self.backends[i].dispatch(op, thetas, extra, config)
+                if op == "value_and_gradient":
+                    out = tuple(np.atleast_2d(np.asarray(o)) for o in out)
+                    assert out[0].shape[0] == n, "fused shard shape mismatch"
+                else:
+                    out = np.atleast_2d(np.asarray(out))
+                    if out.shape[0] != n:
+                        out = out.T
                 wall = time.monotonic() - t0
                 with self._lock:
                     self._inflight[i] -= n
@@ -396,6 +614,13 @@ class FabricRouter(FabricBackend):
                     self.router_stats["points"][i] += n
                     self.router_stats["waves_per_backend"][i] += 1
                 return out, wall, i
+            except UnsupportedCapability:
+                # planning/steal eligibility should make this unreachable;
+                # if capabilities changed under us, do NOT back the backend
+                # off (it is healthy) — just re-raise
+                with self._lock:
+                    self._inflight[i] -= n
+                raise
             except Exception as err:  # noqa: BLE001 — backend failure
                 with self._lock:
                     self._inflight[i] -= n
@@ -405,12 +630,13 @@ class FabricRouter(FabricBackend):
                         self.backoff_s * 2 ** (self._fail_streak[i] - 1),
                         self.backoff_max_s,
                     )
-                    allowed = self._allowed(config)
-                    alive = [j for j in allowed if j not in tried]
+                # a steal must respect the wave's capability: a gradient
+                # shard never lands on an evaluate-only survivor
+                alive = [j for j in self._eligible(config, op) if j not in tried]
                 if not alive:
                     raise RuntimeError(
                         f"router: all {len(tried)} eligible backends failed "
-                        f"for this shard; last: {err!r}"
+                        f"for this {op} shard; last: {err!r}"
                     ) from err
                 with self._lock:
                     self.router_stats["steals"] += 1
@@ -421,17 +647,27 @@ class FabricRouter(FabricBackend):
                         key=lambda j: (self._inflight[j] + n) / self._throughput(j),
                     )
 
-    def evaluate(self, thetas, config):
+    def dispatch(self, op, thetas, extra, config):
         thetas = np.atleast_2d(np.asarray(thetas, float))
         N = len(thetas)
-        plan = self._plan(N, config)
+        plan = self._plan(N, config, op)
         bounds = np.cumsum([0] + [c for _, c in plan])
         futs = [
-            self._ex.submit(self._run_shard, i, thetas[bounds[j]:bounds[j + 1]], config)
+            self._ex.submit(
+                self._run_shard, op, i,
+                thetas[bounds[j]:bounds[j + 1]],
+                self._shard_extra(extra, bounds[j], bounds[j + 1]),
+                config,
+            )
             for j, (i, _) in enumerate(plan)
         ]
         shards = [f.result() for f in futs]
-        rows = np.concatenate([s[0] for s in shards], axis=0)
+        if op == "value_and_gradient":
+            rows = tuple(
+                np.concatenate([s[0][k] for s in shards], axis=0) for k in (0, 1)
+            )
+        else:
+            rows = np.concatenate([s[0] for s in shards], axis=0)
         # imbalance factor: the wave's actual wall time (slowest shard) over
         # the ideal wall time had the observed per-point costs been split
         # perfectly — 1.0 means no backend sat idle waiting on a straggler
@@ -450,7 +686,13 @@ class FabricRouter(FabricBackend):
                 )
         with self._lock:
             self.router_stats["waves"] += 1
+            self.router_stats["op_waves"][op] = (
+                self.router_stats["op_waves"].get(op, 0) + 1
+            )
         return rows
+
+    def evaluate(self, thetas, config):
+        return self.dispatch("evaluate", thetas, None, config)
 
     # -- telemetry / lifecycle ----------------------------------------------
     def reset_stats(self):
@@ -463,7 +705,8 @@ class FabricRouter(FabricBackend):
     def stats(self) -> dict:
         with self._lock:
             rs = {
-                k: (list(v) if isinstance(v, list) else v)
+                k: (list(v) if isinstance(v, list)
+                    else dict(v) if isinstance(v, dict) else v)
                 for k, v in self.router_stats.items()
             }
             ewma = list(self._ewma_s)
@@ -479,6 +722,7 @@ class FabricRouter(FabricBackend):
                 "waves": rs["waves_per_backend"][i],
                 "share": round(rs["points"][i] / total, 3),
                 "failures": rs["failures"][i],
+                "capabilities": sorted(b.capabilities().names()),
                 "ewma_point_s": None if ewma[i] is None else round(ewma[i], 5),
                 "backoff_remaining_s": backed[i],
                 **b.stats(),
@@ -491,6 +735,7 @@ class FabricRouter(FabricBackend):
             "n_backends": len(self.backends),
             "waves": rs["waves"],
             "steals": rs["steals"],
+            "op_waves": rs["op_waves"],
             "last_imbalance": rs["last_imbalance"],
             "imbalance_ewma": rs["imbalance_ewma"],
             "per_backend": per_backend,
@@ -567,7 +812,8 @@ class EvaluationFabric:
     linger_s : initial collector linger window (self-tunes when adaptive).
     adaptive : tune linger/max_batch from the observed wave latency.
     cache_size : LRU entries; 0 disables result caching (in-flight request
-        coalescing stays on).
+        coalescing stays on). Keys are namespaced per capability, so a
+        gradient result can never serve an evaluate request.
     """
 
     def __init__(
@@ -607,9 +853,18 @@ class EvaluationFabric:
             # hierarchies label their level configs so per-level telemetry
             # surfaces here without a separate accounting layer
             "per_label": {},
+            # per-capability wave/point split — gradient-sampler benchmarks
+            # read their wave economics here
+            "per_capability": {},
         }
         self._thread = threading.Thread(target=self._collector, daemon=True)
         self._thread.start()
+
+    # -- capability surface --------------------------------------------------
+    def capabilities(self) -> Capabilities:
+        """What the backend (cluster) advertises — UQ drivers negotiate on
+        this before building gradient-based samplers."""
+        return self.backend.capabilities()
 
     # -- labels / routing ----------------------------------------------------
     def label_config(self, config: dict | None, label: str):
@@ -630,6 +885,13 @@ class EvaluationFabric:
         for k, v in inc.items():
             bucket[k] += v
 
+    def _capability_bump(self, op, **inc):  # caller holds the lock
+        bucket = self.stats["per_capability"].setdefault(
+            op, {"points": 0, "waves": 0, "cache_hits": 0, "cache_misses": 0}
+        )
+        for k, v in inc.items():
+            bucket[k] += v
+
     def bind(self, config: dict | None, backends: Sequence[int]):
         """Restrict waves carrying `config` to a backend subset (requires a
         `FabricRouter` backend — see `FabricRouter.bind`)."""
@@ -641,8 +903,18 @@ class EvaluationFabric:
         self.backend.bind(config, backends)
 
     # -- cache --------------------------------------------------------------
-    def _key(self, theta: np.ndarray, config: dict | None) -> tuple:
-        return (theta.tobytes(), theta.size, config_key(config))
+    def _key(self, theta: np.ndarray, config: dict | None, op: str = "evaluate",
+             extra: np.ndarray | None = None) -> tuple:
+        """Cache key: the operation NAMESPACES the entry (per-capability
+        isolation), and derivative entries carry their second operand —
+        gradient(theta, sens) and gradient(theta, sens') are distinct."""
+        return (
+            op,
+            theta.tobytes(),
+            theta.size,
+            None if extra is None else extra.tobytes(),
+            config_key(config),
+        )
 
     def _cache_get(self, key):  # caller holds the lock
         if not self.cache_size:
@@ -675,6 +947,7 @@ class EvaluationFabric:
             if hit is not None:
                 self.stats["cache_hits"] += 1
                 self._label_bump(config, cache_hits=1)
+                self._capability_bump("evaluate", cache_hits=1)
                 fut: Future = Future()
                 fut.set_result(hit.copy())
                 return fut
@@ -684,6 +957,7 @@ class EvaluationFabric:
                 return _derived_future(inflight)
             self.stats["cache_misses"] += 1
             self._label_bump(config, cache_misses=1)
+            self._capability_bump("evaluate", cache_misses=1)
             fut = Future()
             self._inflight[key] = fut
             self._pending.append((theta, config, fut, key))
@@ -720,11 +994,13 @@ class EvaluationFabric:
                 if hit is not None:
                     self.stats["cache_hits"] += 1
                     self._label_bump(config, cache_hits=1)
+                    self._capability_bump("evaluate", cache_hits=1)
                     rows[i] = hit
                     continue
                 if key in miss_rows:
                     self.stats["cache_hits"] += 1  # intra-batch duplicate
                     self._label_bump(config, cache_hits=1)
+                    self._capability_bump("evaluate", cache_hits=1)
                     continue
                 inflight = self._inflight.get(key)
                 if inflight is not None:
@@ -733,6 +1009,7 @@ class EvaluationFabric:
                     continue
                 self.stats["cache_misses"] += 1
                 self._label_bump(config, cache_misses=1)
+                self._capability_bump("evaluate", cache_misses=1)
                 miss_rows[key] = len(miss_order)
                 miss_order.append(key)
                 miss_thetas.append(thetas[i])
@@ -758,6 +1035,7 @@ class EvaluationFabric:
                 self.stats["direct_batches"] += 1
                 self.stats["fill_sum"] += 1.0
                 self._label_bump(config, points=len(miss_order), waves=1)
+                self._capability_bump("evaluate", points=len(miss_order), waves=1)
                 for k, out in zip(miss_order, outs):
                     self._cache_put(k, out)
                     fut = self._inflight.pop(k, None)
@@ -773,6 +1051,118 @@ class EvaluationFabric:
 
     evaluate = evaluate_batch
     __call__ = evaluate_batch
+
+    # -- batched derivative API ----------------------------------------------
+    def gradient_batch(self, thetas, senss, config: dict | None = None) -> np.ndarray:
+        """Batched VJP wave: [N, n] x [N, m] -> [N, n] routed only to
+        gradient-capable backends (raises `UnsupportedCapability` when the
+        cluster has none). Cached in the per-capability namespace, keyed on
+        (theta, sens, config)."""
+        return self._derivative_wave("gradient", thetas, senss, config)
+
+    def apply_jacobian_batch(self, thetas, vecs, config: dict | None = None) -> np.ndarray:
+        """Batched JVP wave: [N, n] x [N, n] -> [N, m], capability-routed
+        and cached like `gradient_batch`."""
+        return self._derivative_wave("apply_jacobian", thetas, vecs, config)
+
+    def _derivative_wave(self, op: str, thetas, extras, config) -> np.ndarray:
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        extras = np.atleast_2d(np.asarray(extras, float))
+        if len(extras) != len(thetas):
+            raise ValueError(
+                f"{op}_batch: {len(thetas)} thetas but {len(extras)} operand rows"
+            )
+        if not _backend_op_ok(self.backend, op):
+            raise UnsupportedCapability(
+                f"fabric backend advertises no {op!r} capability "
+                f"(advertised: {sorted(self.capabilities().names())})"
+            )
+        N = len(thetas)
+        keys = [self._key(t, config, op, e) for t, e in zip(thetas, extras)]
+        rows: list[np.ndarray | None] = [None] * N
+        miss_order: list[tuple] = []
+        miss_rows: dict[tuple, int] = {}
+        miss_idx: list[int] = []
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("fabric is shut down")
+            for i, key in enumerate(keys):
+                hit = self._cache_get(key)
+                if hit is not None:
+                    self.stats["cache_hits"] += 1
+                    self._label_bump(config, cache_hits=1)
+                    self._capability_bump(op, cache_hits=1)
+                    rows[i] = hit
+                    continue
+                if key in miss_rows:
+                    self.stats["cache_hits"] += 1  # intra-batch duplicate
+                    self._label_bump(config, cache_hits=1)
+                    self._capability_bump(op, cache_hits=1)
+                    continue
+                self.stats["cache_misses"] += 1
+                self._label_bump(config, cache_misses=1)
+                self._capability_bump(op, cache_misses=1)
+                miss_rows[key] = len(miss_order)
+                miss_order.append(key)
+                miss_idx.append(i)
+        outs = None
+        if miss_order:
+            outs = np.atleast_2d(np.asarray(self.backend.dispatch(
+                op, thetas[miss_idx], extras[miss_idx], config
+            ), float))
+            with self._lock:
+                self.stats["waves"] += 1
+                self.stats["points"] += len(miss_order)
+                self.stats["fill_sum"] += 1.0
+                self._label_bump(config, points=len(miss_order), waves=1)
+                self._capability_bump(op, points=len(miss_order), waves=1)
+                for k, out in zip(miss_order, outs):
+                    self._cache_put(k, out)
+        for i, key in enumerate(keys):
+            if rows[i] is None:
+                rows[i] = outs[miss_rows[key]]
+        return np.stack([np.asarray(r).ravel() for r in rows])
+
+    def value_and_gradient_batch(
+        self, thetas, sens_fn: Callable, config: dict | None = None
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Fused forward + VJP wave: (ys [N, m], grads [N, n]) with
+        grads[k] = sens_fn(ys[k])^T J(thetas[k]).
+
+        ONE backend dispatch when the backend advertises the fused in-process
+        path (AD models: the VJP computes the primal anyway); otherwise two
+        capability-routed waves (evaluate, then gradient with host-computed
+        sensitivities) — which is also the negotiation HTTP backends land on,
+        since a callable cannot cross the wire. Fused results are not
+        cached: samplers never revisit a proposal, and the value half is
+        cache-served through the two-wave path when it matters."""
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        if getattr(self.backend, "fused_value_grad", False):
+            ys, grads = self.backend.dispatch(
+                "value_and_gradient", thetas, sens_fn, config
+            )
+            ys = np.atleast_2d(np.asarray(ys, float))
+            grads = np.atleast_2d(np.asarray(grads, float))
+            with self._lock:
+                if self._stop:
+                    raise RuntimeError("fabric is shut down")
+                self.stats["waves"] += 1
+                self.stats["points"] += len(thetas)
+                self.stats["fill_sum"] += 1.0
+                self._label_bump(config, points=len(thetas), waves=1)
+                self._capability_bump(
+                    "value_and_gradient", points=len(thetas), waves=1
+                )
+            return ys, grads
+        if not _backend_op_ok(self.backend, "gradient"):
+            raise UnsupportedCapability(
+                "fabric backend advertises no 'gradient' capability — "
+                "cannot serve value_and_gradient waves "
+                f"(advertised: {sorted(self.capabilities().names())})"
+            )
+        ys = self.evaluate_batch(thetas, config)
+        senss = np.stack([np.asarray(sens_fn(y), float).ravel() for y in ys])
+        return ys, self.gradient_batch(thetas, senss, config)
 
     # -- collector (submit path) --------------------------------------------
     def _collector(self):
@@ -807,6 +1197,9 @@ class EvaluationFabric:
                         outs = outs.T
                     with self._lock:
                         self._label_bump(items[0][1], points=len(items), waves=1)
+                        self._capability_bump(
+                            "evaluate", points=len(items), waves=1
+                        )
                         for (_, _, fut, key), out in zip(items, outs):
                             self._cache_put(key, out)
                             self._inflight.pop(key, None)
@@ -841,6 +1234,7 @@ class EvaluationFabric:
     def telemetry(self) -> dict:
         s = dict(self.stats)
         s["per_label"] = {k: dict(v) for k, v in s["per_label"].items()}
+        s["per_capability"] = {k: dict(v) for k, v in s["per_capability"].items()}
         looked_up = s["cache_hits"] + s["cache_misses"]
         s["cache_hit_rate"] = s["cache_hits"] / looked_up if looked_up else 0.0
         s["mean_wave_size"] = s["points"] / s["waves"] if s["waves"] else 0.0
@@ -849,6 +1243,7 @@ class EvaluationFabric:
         # cap, explicit batches full by definition
         s["wave_fill"] = s.pop("fill_sum") / s["waves"] if s["waves"] else 0.0
         s["linger_s"] = round(self.linger_s, 5)
+        s["capabilities"] = sorted(self.capabilities().names())
         s["backend"] = self.backend.stats()
         back = s["backend"]
         if "padded" in back and s["points"]:
@@ -861,6 +1256,7 @@ class EvaluationFabric:
             # benchmarks read them without digging into the backend tree
             s["router_steals"] = back["steals"]
             s["router_imbalance"] = back["imbalance_ewma"]
+            s["router_op_waves"] = back["op_waves"]
             s["backend_share"] = [b["share"] for b in back["per_backend"]]
         return s
 

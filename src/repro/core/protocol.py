@@ -5,6 +5,10 @@ Endpoints (protocol version 1.0):
   POST /InputSizes           {"name", "config"}        -> {"inputSizes": [..]}
   POST /OutputSizes          {"name", "config"}        -> {"outputSizes": [..]}
   POST /ModelInfo            {"name"}                  -> {"support": {...}}
+                             ("support" is the full `Capabilities` wire doc:
+                             Evaluate/Gradient/ApplyJacobian/ApplyHessian plus
+                             the batched variants — clients negotiate on it
+                             and never probe endpoints)
   POST /Evaluate             {"name", "input", "config"} -> {"output": [[..]]}
   POST /EvaluateBatch        {"name", "inputs": [[..], ..], "config"}
                              -> {"outputs": [[..], ..]}
@@ -12,17 +16,29 @@ Endpoints (protocol version 1.0):
                              evaluation point, its blocks flattened; N points
                              per round-trip instead of one)
   POST /Gradient             {"name", "outWrt", "inWrt", "input", "sens", "config"}
+  POST /GradientBatch        {"name", "inputs": [[..], ..], "senss": [[..], ..],
+                             "config"} -> {"outputs": [[..], ..]}
+                             (batched extension: row k of "outputs" is
+                             senss[k]^T J_F(inputs[k]) in the flattened
+                             single-block layout — one VJP wave per round-trip)
   POST /ApplyJacobian        {"name", "outWrt", "inWrt", "input", "vec", "config"}
+  POST /ApplyJacobianBatch   {"name", "inputs": [[..], ..], "vecs": [[..], ..],
+                             "config"} -> {"outputs": [[..], ..]}
+                             (batched JVP wave)
   POST /ApplyHessian         {"name", "outWrt", "inWrt1", "inWrt2", "input", "sens", "vec", "config"}
 
 Errors: {"error": {"type": ..., "message": ...}} with HTTP 400.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any
+from repro.core.interface import Capabilities
 
 PROTOCOL_VERSION = 1.0
+
+#: DEPRECATED alias — the typed `Capabilities` descriptor replaced the v1
+#: ModelSupport dataclass; `from_json` accepts both the old five-key wire doc
+#: and the full capability set (missing keys default to False).
+ModelSupport = Capabilities
 
 
 def config_key(config: dict | None) -> tuple:
@@ -30,37 +46,6 @@ def config_key(config: dict | None) -> tuple:
     fabric result cache and the pool jit cache — the two must agree on what
     makes two configs 'the same')."""
     return tuple(sorted((k, repr(v)) for k, v in (config or {}).items()))
-
-
-@dataclass
-class ModelSupport:
-    evaluate: bool = False
-    gradient: bool = False
-    apply_jacobian: bool = False
-    apply_hessian: bool = False
-    # batched extension: the server accepts /EvaluateBatch for this model
-    # AND serves it from a native batched program (not a per-point loop) —
-    # clients use this to skip endpoint probing and dispatch whole waves
-    evaluate_batch: bool = False
-
-    def to_json(self) -> dict:
-        return {
-            "Evaluate": self.evaluate,
-            "Gradient": self.gradient,
-            "ApplyJacobian": self.apply_jacobian,
-            "ApplyHessian": self.apply_hessian,
-            "EvaluateBatch": self.evaluate_batch,
-        }
-
-    @classmethod
-    def from_json(cls, d: dict) -> "ModelSupport":
-        return cls(
-            evaluate=d.get("Evaluate", False),
-            gradient=d.get("Gradient", False),
-            apply_jacobian=d.get("ApplyJacobian", False),
-            apply_hessian=d.get("ApplyHessian", False),
-            evaluate_batch=d.get("EvaluateBatch", False),
-        )
 
 
 def error_body(kind: str, message: str) -> dict:
@@ -87,6 +72,29 @@ def validate_evaluate_batch_request(body: dict, input_sizes: list[int]) -> str |
         if not isinstance(vec, list) or len(vec) != n:
             got = len(vec) if isinstance(vec, list) else type(vec).__name__
             return f"inputs[{i}]: got {got}, want {n} values (flattened blocks)"
+    return None
+
+
+def validate_batched_pair_request(
+    body: dict,
+    input_sizes: list[int],
+    extra_field: str,
+    extra_len: int,
+) -> str | None:
+    """Validate a batched two-array request (`/GradientBatch` inputs+senss,
+    `/ApplyJacobianBatch` inputs+vecs): both lists present, same length, and
+    every row the declared flat width."""
+    err = validate_evaluate_batch_request(body, input_sizes)
+    if err:
+        return err
+    extras = body.get(extra_field)
+    inputs = body["inputs"]
+    if not isinstance(extras, list) or len(extras) != len(inputs):
+        return f"expected '{extra_field}' to be a list of {len(inputs)} rows"
+    for i, row in enumerate(extras):
+        if not isinstance(row, list) or len(row) != extra_len:
+            got = len(row) if isinstance(row, list) else type(row).__name__
+            return f"{extra_field}[{i}]: got {got}, want {extra_len} values"
     return None
 
 

@@ -3,10 +3,14 @@
 `serve_models([model], port)` mirrors umbridge.serve_models; the threaded
 variant is used by tests and by `ThreadedPool`-over-HTTP setups to emulate
 the paper's k8s pods on one host. Beyond protocol 1.0 it serves the batched
-`/EvaluateBatch` extension (N points per round-trip) used by the
-EvaluationFabric HTTP backend, and a GET `/Health` liveness probe used by
+extensions used by the EvaluationFabric backends — `/EvaluateBatch`,
+`/GradientBatch` and `/ApplyJacobianBatch` (N points / VJPs / JVPs per
+round-trip) — and a GET `/Health` liveness probe used by
 `repro.core.client.register_servers` when enrolling a cluster of servers
-behind a `FabricRouter`.
+behind a `FabricRouter`. `/ModelInfo` advertises each model's full
+`Capabilities` descriptor, so clients negotiate the operation surface once
+instead of probing endpoints; requests for an unadvertised capability answer
+`UnsupportedFeature` (HTTP 400).
 """
 from __future__ import annotations
 
@@ -16,10 +20,11 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import numpy as np
 
-from repro.core.interface import Model
+from repro.core.interface import Model, model_capabilities
 from repro.core.protocol import (
     PROTOCOL_VERSION,
     error_body,
+    validate_batched_pair_request,
     validate_evaluate_batch_request,
     validate_evaluate_request,
 )
@@ -44,17 +49,15 @@ def _make_handler(models: dict[str, Model]):
             elif self.path.rstrip("/") == "/Health":
                 # liveness probe for multi-server registration: routers ping
                 # this before enrolling a server in the backend cluster
+                caps = {name: model_capabilities(m) for name, m in models.items()}
                 self._send(
                     {
                         "status": "ok",
                         "protocolVersion": PROTOCOL_VERSION,
                         "models": list(models),
-                        "batch": {
-                            name: bool(
-                                getattr(m, "supports_evaluate_batch", lambda: False)()
-                            )
-                            for name, m in models.items()
-                        },
+                        # legacy key (pre-capability clients read it)
+                        "batch": {n: c.evaluate_batch for n, c in caps.items()},
+                        "capabilities": {n: c.to_json() for n, c in caps.items()},
                     }
                 )
             else:
@@ -71,27 +74,16 @@ def _make_handler(models: dict[str, Model]):
             if model is None:
                 return self._send(error_body("ModelNotFound", str(name)), 400)
             config = body.get("config") or {}
+            caps = model_capabilities(model, config)
             try:
                 if self.path == "/InputSizes":
                     return self._send({"inputSizes": model.get_input_sizes(config)})
                 if self.path == "/OutputSizes":
                     return self._send({"outputSizes": model.get_output_sizes(config)})
                 if self.path == "/ModelInfo":
-                    return self._send(
-                        {
-                            "support": {
-                                "Evaluate": model.supports_evaluate(),
-                                "Gradient": model.supports_gradient(),
-                                "ApplyJacobian": model.supports_apply_jacobian(),
-                                "ApplyHessian": model.supports_apply_hessian(),
-                                "EvaluateBatch": bool(
-                                    getattr(model, "supports_evaluate_batch", lambda: False)()
-                                ),
-                            }
-                        }
-                    )
+                    return self._send({"support": caps.to_json()})
                 if self.path == "/Evaluate":
-                    if not model.supports_evaluate():
+                    if not caps.evaluate:
                         return self._send(error_body("UnsupportedFeature", "Evaluate"), 400)
                     err = validate_evaluate_request(body, model.get_input_sizes(config))
                     if err:
@@ -99,7 +91,7 @@ def _make_handler(models: dict[str, Model]):
                     out = model(body["input"], config)
                     return self._send({"output": [list(map(float, v)) for v in out]})
                 if self.path == "/EvaluateBatch":
-                    if not model.supports_evaluate():
+                    if not caps.evaluate:
                         return self._send(error_body("UnsupportedFeature", "Evaluate"), 400)
                     sizes = model.get_input_sizes(config)
                     err = validate_evaluate_batch_request(body, sizes)
@@ -115,16 +107,63 @@ def _make_handler(models: dict[str, Model]):
                         {"outputs": [list(map(float, row)) for row in outs]}
                     )
                 if self.path == "/Gradient":
+                    if not caps.op_supported("gradient"):
+                        return self._send(error_body("UnsupportedFeature", "Gradient"), 400)
                     out = model.gradient(
                         body["outWrt"], body["inWrt"], body["input"], body["sens"], config
                     )
                     return self._send({"output": list(map(float, out))})
+                if self.path == "/GradientBatch":
+                    # batched VJP wave; a model advertising only the
+                    # per-point form still serves it (base-class loop) —
+                    # the CLIENT saves the round-trips either way
+                    if not caps.op_supported("gradient"):
+                        return self._send(error_body("UnsupportedFeature", "Gradient"), 400)
+                    err = validate_batched_pair_request(
+                        body, model.get_input_sizes(config), "senss",
+                        sum(model.get_output_sizes(config)),
+                    )
+                    if err:
+                        return self._send(error_body("InvalidInput", err), 400)
+                    outs = np.atleast_2d(model.gradient_batch(
+                        np.asarray(body["inputs"], float),
+                        np.asarray(body["senss"], float), config,
+                    ))
+                    return self._send(
+                        {"outputs": [list(map(float, row)) for row in outs]}
+                    )
                 if self.path == "/ApplyJacobian":
+                    if not caps.op_supported("apply_jacobian"):
+                        return self._send(
+                            error_body("UnsupportedFeature", "ApplyJacobian"), 400
+                        )
                     out = model.apply_jacobian(
                         body["outWrt"], body["inWrt"], body["input"], body["vec"], config
                     )
                     return self._send({"output": list(map(float, out))})
+                if self.path == "/ApplyJacobianBatch":
+                    if not caps.op_supported("apply_jacobian"):
+                        return self._send(
+                            error_body("UnsupportedFeature", "ApplyJacobian"), 400
+                        )
+                    err = validate_batched_pair_request(
+                        body, model.get_input_sizes(config), "vecs",
+                        sum(model.get_input_sizes(config)),
+                    )
+                    if err:
+                        return self._send(error_body("InvalidInput", err), 400)
+                    outs = np.atleast_2d(model.apply_jacobian_batch(
+                        np.asarray(body["inputs"], float),
+                        np.asarray(body["vecs"], float), config,
+                    ))
+                    return self._send(
+                        {"outputs": [list(map(float, row)) for row in outs]}
+                    )
                 if self.path == "/ApplyHessian":
+                    if not caps.op_supported("apply_hessian"):
+                        return self._send(
+                            error_body("UnsupportedFeature", "ApplyHessian"), 400
+                        )
                     out = model.apply_hessian(
                         body["outWrt"], body["inWrt1"], body["inWrt2"],
                         body["input"], body["sens"], body["vec"], config,

@@ -1,5 +1,6 @@
 """MCMC: random-walk Metropolis, adaptive Metropolis (Haario), pCN — plus
-lockstep ENSEMBLE variants of RWM and pCN.
+lockstep ENSEMBLE variants of RWM / pCN and GRADIENT-BASED lockstep
+samplers (MALA / HMC) riding the capability-typed model surface.
 
 Host-side implementations (the paper's UQ drivers run on a laptop /
 workstation and treat the model as remote), with ESS / R-hat diagnostics.
@@ -12,7 +13,14 @@ Chains are embarrassingly parallel two ways:
   LOCKSTEP: every step proposes for all chains at once and costs exactly ONE
   `evaluate_batch` wave of K points, which native batch models (vmapped JAX
   apps, `/EvaluateBatch` servers) evaluate as one SPMD program. Same
-  per-chain Markov kernel, perfectly filled waves by construction.
+  per-chain Markov kernel, perfectly filled waves by construction. The
+  optional `adaptive=` flag pools a Haario-style empirical proposal
+  covariance across the whole [K, d] state block (one einsum per step).
+* `ensemble_mala` / `ensemble_hmc` — the gradient analogue: every step (or
+  leapfrog substep) across all K chains is ONE fused value-and-gradient
+  wave through `batched_value_grad_logpost` — AD-capable backends compute
+  the primal and sens^T J in a single dispatch, so drift-informed proposals
+  cost the same wave count RWM pays for blind ones.
 """
 from __future__ import annotations
 
@@ -43,6 +51,11 @@ class EnsembleResult:
     # counts the ones that did
     n_model_evals: int
     n_waves: int  # batched model dispatches (steps + 1)
+    #: fused value-and-gradient waves issued (gradient-based samplers only)
+    n_grad_waves: int = 0
+    #: final (possibly adapted) proposal covariance / step size
+    proposal_cov: np.ndarray | None = None
+    final_step_size: float | None = None
 
     @property
     def accept_rate(self) -> float:
@@ -59,6 +72,50 @@ class EnsembleResult:
             )
             for k in range(len(self.samples))
         ]
+
+
+class PooledCovarianceAdapter:
+    """Haario-style adaptive proposal covariance POOLED across K lockstep
+    chains: every step contributes its whole [K, d] state block as one batch
+    — the running mean/scatter update is a single einsum, so adaptation
+    costs nothing next to a model wave. The per-step weight of any single
+    state shrinks as 1/n_total, so diminishing adaptation holds exactly as
+    in single-chain Haario, but the empirical covariance sees K points per
+    step instead of one (K-fold faster warm-up)."""
+
+    def __init__(self, d: int, sd: float | None = None, eps: float = 1e-10):
+        self.d = int(d)
+        self.sd = float(sd) if sd is not None else 2.4**2 / d
+        self.eps = float(eps)
+        self.n = 0
+        self.mean = np.zeros(d)
+        self._scatter = np.zeros((d, d))
+
+    def update(self, xs: np.ndarray):
+        """Fold one [K, d] block of post-step states into the running
+        moments (Chan-style batched Welford; one einsum for the scatter)."""
+        xs = np.atleast_2d(np.asarray(xs, float))
+        m = len(xs)
+        mu_b = xs.mean(axis=0)
+        dev = xs - mu_b
+        s_b = np.einsum("ki,kj->ij", dev, dev)
+        delta = mu_b - self.mean
+        tot = self.n + m
+        self._scatter += s_b + np.outer(delta, delta) * (self.n * m / tot)
+        self.mean += delta * (m / tot)
+        self.n = tot
+
+    def cov(self) -> np.ndarray:
+        if self.n < 2:
+            return np.eye(self.d)
+        return self._scatter / (self.n - 1)
+
+    def proposal_cov(self) -> np.ndarray:
+        """sd * empirical covariance + eps I (Haario's regularized scale)."""
+        return self.sd * self.cov() + self.eps * np.eye(self.d)
+
+    def chol(self) -> np.ndarray:
+        return np.linalg.cholesky(self.proposal_cov())
 
 
 def batched_logpost(
@@ -104,21 +161,95 @@ def batched_logpost(
     return logpost
 
 
+def batched_value_grad_logpost(
+    evaluator,
+    loglik: Callable[[np.ndarray], float],
+    grad_loglik: Callable,
+    logprior: Callable[[np.ndarray], float] | None = None,
+    grad_logprior: Callable[[np.ndarray], np.ndarray] | None = None,
+    config: dict | None = None,
+) -> Callable[[np.ndarray], tuple[np.ndarray, np.ndarray]]:
+    """[K, d] -> (logpost [K], grad_logpost [K, d]) for the gradient-based
+    ensemble samplers, from anything with a `value_and_gradient_batch`
+    (EvaluationFabric, capability-typed Model).
+
+    `grad_loglik(y [m]) -> [m]` is the data-side sensitivity (dloglik/dy at
+    one output row); when it is jax-traceable AND the backend is AD-native,
+    the whole (value, grad) pair costs ONE fused wave per call — otherwise
+    the fabric negotiates down to an evaluate wave plus a gradient wave.
+    Out-of-prior chains are masked BEFORE the wave (their logpost is -inf
+    and their gradient zero), so no model evaluation is wasted; the chain
+    rule adds `grad_logprior` (when given) on the parameter side."""
+    if not hasattr(evaluator, "value_and_gradient_batch"):
+        raise TypeError(
+            "batched_value_grad_logpost needs an evaluator with "
+            "value_and_gradient_batch (an EvaluationFabric or a Model); "
+            f"got {type(evaluator).__name__}"
+        )
+
+    def value_grad(thetas: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        K, d = thetas.shape
+        lps = np.full(K, -np.inf)
+        glps = np.zeros((K, d))
+        prior = np.zeros(K)
+        if logprior is not None:
+            prior = np.asarray([float(logprior(t)) for t in thetas])
+        ok = np.isfinite(prior)
+        if ok.any():
+            ys, gys = evaluator.value_and_gradient_batch(
+                thetas[ok], grad_loglik, config
+            )
+            ys = np.atleast_2d(np.asarray(ys, float))
+            lps[ok] = prior[ok] + np.asarray([float(loglik(y)) for y in ys])
+            grads = np.atleast_2d(np.asarray(gys, float))
+            if grad_logprior is not None:
+                grads = grads + np.stack([
+                    np.asarray(grad_logprior(t), float).ravel()
+                    for t in thetas[ok]
+                ])
+            glps[ok] = grads
+        value_grad.points_evaluated += int(ok.sum())
+        value_grad.waves += 1
+        return lps, glps
+
+    def reset():
+        value_grad.points_evaluated = 0
+        value_grad.waves = 0
+
+    value_grad.reset = reset
+    value_grad.reset()
+    return value_grad
+
+
 def ensemble_random_walk_metropolis(
     logpost_batch: Callable[[np.ndarray], np.ndarray],
     x0s: np.ndarray,
     n_steps: int,
     prop_cov: np.ndarray,
     rng: np.random.Generator,
+    *,
+    adaptive: bool = False,
+    adapt_start: int = 25,
+    adapt_interval: int = 1,
+    sd: float | None = None,
 ) -> EnsembleResult:
     """K lockstep RWM chains: ONE [K, d] -> [K] model wave per step.
 
     Each chain runs the standard Metropolis kernel (same proposal covariance,
     independent randomness per chain) — only the model evaluations are fused,
-    so the per-chain law matches `random_walk_metropolis`."""
+    so the per-chain law matches `random_walk_metropolis`.
+
+    `adaptive=True` turns on Haario-style proposal adaptation with the
+    empirical covariance POOLED across the whole lockstep [K, d] state block
+    (one einsum per step, K observations per update): after `adapt_start`
+    steps the proposal Cholesky refreshes every `adapt_interval` steps from
+    `sd * pooled_cov + eps I` (sd defaults to Haario's 2.4^2/d). The pooled
+    estimate warms up K-fold faster than single-chain adaptation."""
     xs = np.atleast_2d(np.asarray(x0s, float)).copy()
     K, d = xs.shape
     L = np.linalg.cholesky(np.atleast_2d(prop_cov))
+    adapter = PooledCovarianceAdapter(d, sd=sd) if adaptive else None
     lps = np.asarray(logpost_batch(xs), float).ravel()
     samples = np.empty((K, n_steps, d))
     lps_out = np.empty((K, n_steps))
@@ -132,7 +263,14 @@ def ensemble_random_walk_metropolis(
         acc += accept
         samples[:, i] = xs
         lps_out[:, i] = lps
-    return EnsembleResult(samples, lps_out, acc / n_steps, K * (n_steps + 1), n_steps + 1)
+        if adapter is not None:
+            adapter.update(xs)
+            if i >= adapt_start and (i - adapt_start) % adapt_interval == 0:
+                L = adapter.chol()
+    return EnsembleResult(
+        samples, lps_out, acc / n_steps, K * (n_steps + 1), n_steps + 1,
+        proposal_cov=None if adapter is None else adapter.proposal_cov(),
+    )
 
 
 def ensemble_pcn(
@@ -162,6 +300,150 @@ def ensemble_pcn(
         samples[:, i] = xs
         lls_out[:, i] = lls
     return EnsembleResult(samples, lls_out, acc / n_steps, K * (n_steps + 1), n_steps + 1)
+
+
+def ensemble_mala(
+    value_grad_logpost: Callable[[np.ndarray], tuple[np.ndarray, np.ndarray]],
+    x0s: np.ndarray,
+    n_steps: int,
+    step_size: float,
+    rng: np.random.Generator,
+    *,
+    precond: np.ndarray | None = None,
+    adapt_steps: int = 0,
+    target_accept: float = 0.574,
+) -> EnsembleResult:
+    """K lockstep MALA chains: ONE fused value-and-gradient wave per step.
+
+    Preconditioned Metropolis-adjusted Langevin: with C = `precond` (defaults
+    to I; pass the prior/posterior scale — MALA without preconditioning is
+    hopeless on badly scaled parameters) and eps = `step_size`,
+
+        x' = x + (eps^2/2) C grad(x) + eps chol(C) xi,
+
+    accepted with the exact MH ratio including both proposal densities. The
+    current state's (logpost, grad) pair is carried between steps, so the
+    whole ensemble costs exactly one wave per step — the same wave count
+    ensemble RWM pays, but each wave also buys the drift (AD backends fuse
+    the primal and the VJP into one dispatch).
+
+    `adapt_steps > 0` runs Robbins-Monro step-size adaptation toward
+    `target_accept` (MALA's optimal 0.574) over the first `adapt_steps`
+    steps, pooled across chains; the adapted eps is reported in
+    `final_step_size`."""
+    xs = np.atleast_2d(np.asarray(x0s, float)).copy()
+    K, d = xs.shape
+    C = np.eye(d) if precond is None else np.atleast_2d(np.asarray(precond, float))
+    L = np.linalg.cholesky(C)
+    Cinv = np.linalg.inv(C)
+    eps = float(step_size)
+    lps, gs = value_grad_logpost(xs)
+    lps = np.asarray(lps, float).ravel()
+    gs = np.atleast_2d(np.asarray(gs, float))
+    samples = np.empty((K, n_steps, d))
+    lps_out = np.empty((K, n_steps))
+    acc = np.zeros(K)
+
+    def _logq(diff_minus_drift: np.ndarray, e: float) -> np.ndarray:
+        # log N(x' ; x + drift, e^2 C) up to the (cancelling) normalization
+        return -0.5 / e**2 * np.einsum(
+            "ki,ij,kj->k", diff_minus_drift, Cinv, diff_minus_drift
+        )
+
+    for i in range(n_steps):
+        drift = 0.5 * eps**2 * gs @ C.T
+        props = xs + drift + eps * rng.standard_normal((K, d)) @ L.T
+        lp_props, g_props = value_grad_logpost(props)
+        lp_props = np.asarray(lp_props, float).ravel()
+        g_props = np.atleast_2d(np.asarray(g_props, float))
+        drift_rev = 0.5 * eps**2 * g_props @ C.T
+        log_q_fwd = _logq(props - xs - drift, eps)
+        log_q_rev = _logq(xs - props - drift_rev, eps)
+        with np.errstate(invalid="ignore"):
+            log_alpha = (lp_props - lps) + (log_q_rev - log_q_fwd)
+        log_alpha = np.where(np.isnan(log_alpha), -np.inf, log_alpha)
+        accept = np.log(rng.uniform(size=K)) < log_alpha
+        xs = np.where(accept[:, None], props, xs)
+        lps = np.where(accept, lp_props, lps)
+        gs = np.where(accept[:, None], g_props, gs)
+        acc += accept
+        samples[:, i] = xs
+        lps_out[:, i] = lps
+        if i < adapt_steps:
+            # Robbins-Monro on log eps, pooled acceptance across the block
+            eps *= float(np.exp((i + 1) ** -0.6 * (accept.mean() - target_accept)))
+    return EnsembleResult(
+        samples, lps_out, acc / n_steps, K * (n_steps + 1), n_steps + 1,
+        n_grad_waves=n_steps + 1, final_step_size=eps,
+    )
+
+
+def ensemble_hmc(
+    value_grad_logpost: Callable[[np.ndarray], tuple[np.ndarray, np.ndarray]],
+    x0s: np.ndarray,
+    n_steps: int,
+    step_size: float,
+    n_leapfrog: int,
+    rng: np.random.Generator,
+    *,
+    precond: np.ndarray | None = None,
+    adapt_steps: int = 0,
+    target_accept: float = 0.8,
+) -> EnsembleResult:
+    """K lockstep preconditioned HMC chains: `n_leapfrog` fused
+    value-and-gradient waves per step (every leapfrog substep advances ALL
+    chains at once).
+
+    With C = `precond`, momenta are drawn p ~ N(0, C^-1) and the kinetic
+    energy is p^T C p / 2 — equivalent to mass matrix M = C^-1, the standard
+    preconditioning that makes unit `step_size` roughly correct when C
+    matches the posterior scale. Chains accept/reject independently on the
+    exact Hamiltonian error; a chain whose trajectory leaves the prior
+    support (logpost -inf) diverges to H = inf and rejects."""
+    xs = np.atleast_2d(np.asarray(x0s, float)).copy()
+    K, d = xs.shape
+    C = np.eye(d) if precond is None else np.atleast_2d(np.asarray(precond, float))
+    L = np.linalg.cholesky(C)
+    # p ~ N(0, C^-1): p = L^-T xi  (so p^T C p = |xi|^2)
+    Linv_T = np.linalg.inv(L).T
+    eps = float(step_size)
+    lps, gs = value_grad_logpost(xs)
+    lps = np.asarray(lps, float).ravel()
+    gs = np.atleast_2d(np.asarray(gs, float))
+    samples = np.empty((K, n_steps, d))
+    lps_out = np.empty((K, n_steps))
+    acc = np.zeros(K)
+    n_waves = 1
+    for i in range(n_steps):
+        p0 = rng.standard_normal((K, d)) @ Linv_T.T
+        h0 = -lps + 0.5 * np.einsum("ki,ij,kj->k", p0, C, p0)
+        q, p = xs.copy(), p0.copy()
+        lp_q, g_q = lps, gs
+        for _ in range(n_leapfrog):
+            p = p + 0.5 * eps * g_q
+            q = q + eps * p @ C.T
+            lp_q, g_q = value_grad_logpost(q)
+            lp_q = np.asarray(lp_q, float).ravel()
+            g_q = np.atleast_2d(np.asarray(g_q, float))
+            p = p + 0.5 * eps * g_q
+            n_waves += 1
+        with np.errstate(invalid="ignore"):
+            h1 = -lp_q + 0.5 * np.einsum("ki,ij,kj->k", p, C, p)
+            log_alpha = h0 - h1
+        log_alpha = np.where(np.isnan(log_alpha), -np.inf, log_alpha)
+        accept = np.log(rng.uniform(size=K)) < log_alpha
+        xs = np.where(accept[:, None], q, xs)
+        lps = np.where(accept, lp_q, lps)
+        gs = np.where(accept[:, None], g_q, gs)
+        acc += accept
+        samples[:, i] = xs
+        lps_out[:, i] = lps
+        if i < adapt_steps:
+            eps *= float(np.exp((i + 1) ** -0.6 * (accept.mean() - target_accept)))
+    return EnsembleResult(
+        samples, lps_out, acc / n_steps, K * n_waves, n_waves,
+        n_grad_waves=n_waves, final_step_size=eps,
+    )
 
 
 def random_walk_metropolis(

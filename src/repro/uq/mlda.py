@@ -25,7 +25,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.uq.mcmc import ChainResult, batched_logpost
+from repro.uq.mcmc import ChainResult, PooledCovarianceAdapter, batched_logpost
 
 
 @dataclass
@@ -44,6 +44,8 @@ class EnsembleMLDAResult:
     accept_rates: list  # per level, aggregated over chains
     evals_per_level: list  # logpost evaluations per level (all chains)
     n_waves: int  # batched model dispatches for the whole ensemble
+    #: final level-0 proposal covariance when Haario adaptation was on
+    proposal_cov: np.ndarray | None = None
 
     @property
     def samples_flat(self) -> np.ndarray:
@@ -208,9 +210,19 @@ def batched_level_logposts(
 
 class _EnsembleLevelSampler:
     """Recursive DA sampler advancing K chains in LOCKSTEP: one step at any
-    level costs one [<=K, d] model wave, never K round-trips."""
+    level costs one [<=K, d] model wave, never K round-trips.
 
-    def __init__(self, logpost_batches, subsampling, prop_cov, rng, K):
+    Optional Haario-style adaptation of the level-0 proposal covariance,
+    POOLED across the whole lockstep chain block (`adapt_start` level-0
+    steps of warm-up, then the proposal Cholesky refreshes from
+    `sd * pooled_cov + eps I` — one einsum per level-0 step, see
+    `uq.mcmc.PooledCovarianceAdapter`). Only the coarsest level's random
+    walk adapts: all finer proposals are subchain endpoints, so the whole
+    MLDA stack inherits the adapted scale."""
+
+    def __init__(self, logpost_batches, subsampling, prop_cov, rng, K,
+                 adaptive: bool = False, adapt_start: int = 50,
+                 adapt_interval: int = 1, sd: float | None = None):
         self.logposts = list(logpost_batches)
         self.subsampling = list(subsampling)
         self.rng = rng
@@ -222,6 +234,10 @@ class _EnsembleLevelSampler:
         self.tot = np.zeros(self.L)
         self.evals = [0] * self.L
         self.waves = 0
+        self.adapter = PooledCovarianceAdapter(self.d, sd=sd) if adaptive else None
+        self.adapt_start = int(adapt_start)
+        self.adapt_interval = max(1, int(adapt_interval))
+        self._level0_steps = 0
 
     def _lp(self, level: int, xs: np.ndarray) -> np.ndarray:
         """[M, d] -> [M] in ONE wave."""
@@ -241,6 +257,12 @@ class _EnsembleLevelSampler:
             self.acc[0] += accept.sum()
             xs = np.where(accept[:, None], props, xs)
             lps = np.where(accept, lp_props, lps)
+            if self.adapter is not None:
+                self.adapter.update(xs)
+                self._level0_steps += 1
+                past = self._level0_steps - self.adapt_start
+                if past >= 0 and past % self.adapt_interval == 0:
+                    self.chol = self.adapter.chol()
             return xs, lps, accept
         # K coarse subchains advanced in lockstep, started from xs
         sub = self.subsampling[level - 1]
@@ -282,6 +304,10 @@ def ensemble_mlda(
     level_configs: Sequence[dict | None] | None = None,
     loglik: Callable | None = None,
     logprior: Callable | None = None,
+    adaptive: bool = False,
+    adapt_start: int = 50,
+    adapt_interval: int = 1,
+    adapt_sd: float | None = None,
 ) -> EnsembleMLDAResult:
     """K MLDA chains advanced in LOCKSTEP (paper §4.3 at fabric scale).
 
@@ -296,7 +322,13 @@ def ensemble_mlda(
     `logpost_batches[l]`: [M, d] -> [M] at level l (coarsest first) — or
     pass `fabric=` with `level_configs=`/`loglik=` (and optional
     `logprior=`) to build them via `batched_level_logposts`.
-    `x0s`: [K, d] initial states (one per chain)."""
+    `x0s`: [K, d] initial states (one per chain).
+
+    `adaptive=True` adapts the level-0 random-walk proposal covariance
+    Haario-style, pooled across the lockstep chain block (the [K, d] state
+    block makes the pooled empirical covariance one einsum per level-0
+    step); `adapt_start` counts level-0 steps before the first refresh. The
+    final adapted covariance is reported as `proposal_cov`."""
     if fabric is not None:
         assert loglik is not None and level_configs is not None, (
             "fabric= requires loglik= and level_configs="
@@ -308,7 +340,9 @@ def ensemble_mlda(
     xs = np.atleast_2d(np.asarray(x0s, float)).copy()
     K, d = xs.shape
     sampler = _EnsembleLevelSampler(
-        logpost_batches, subsampling, prop_cov, rng, K
+        logpost_batches, subsampling, prop_cov, rng, K,
+        adaptive=adaptive, adapt_start=adapt_start,
+        adapt_interval=adapt_interval, sd=adapt_sd,
     )
     top = len(logpost_batches) - 1
     lps = sampler._lp(top, xs)
@@ -320,7 +354,11 @@ def ensemble_mlda(
         float(sampler.acc[l] / sampler.tot[l]) if sampler.tot[l] else 0.0
         for l in range(len(logpost_batches))
     ]
-    return EnsembleMLDAResult(out, rates, list(sampler.evals), sampler.waves)
+    return EnsembleMLDAResult(
+        out, rates, list(sampler.evals), sampler.waves,
+        proposal_cov=None if sampler.adapter is None
+        else sampler.adapter.proposal_cov(),
+    )
 
 
 def delayed_acceptance(
