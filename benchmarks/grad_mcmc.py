@@ -49,9 +49,13 @@ def _pooled_min_ess(samples: np.ndarray) -> float:
     return float(min(per_dim))
 
 
-def _posterior_pieces(model: TsunamiModel, seed: int):
+def _posterior_pieces(model: TsunamiModel, seed: int, data_config=LEVEL):
+    """The shared tsunami toy posterior (synthetic data at TRUE_THETA +
+    half-noise, box prior, Gaussian likelihood); `data_config` picks the
+    level that generates the observations (surrogate_da uses the fine
+    level)."""
     rng = np.random.default_rng(seed)
-    data = np.asarray(model([list(TRUE_THETA)], LEVEL)[0])
+    data = np.asarray(model([list(TRUE_THETA)], data_config)[0])
     data = data + rng.standard_normal(4) * NOISE_SD * 0.5
 
     def logprior(th):

@@ -64,6 +64,14 @@ def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
                    f"rwm_ess_per_wave={out['rwm']['ess_per_wave']:.2f};"
                    f"ratio={out['ess_per_wave_ratio']:.2f}x")
         rate = out["mala"]["evals_per_sec"]
+    elif name.startswith("surrogate_da"):
+        surr = out["surrogate_three_stage"]
+        derived = (
+            f"coarse_evals_per_ess_reduction="
+            f"{out['coarse_evals_per_ess_reduction']:.1f}x;"
+            f"screen_pass_rate={surr['screen']['pass_rate']}"
+        )
+        rate = surr["coarse_evals_per_sec"]
     elif name.startswith("mlda"):
         derived = f"speedup={out['speedup']:.1f};evals={out['evals_per_level']}"
         if isinstance(out, dict) and "ensemble" in out:
@@ -100,6 +108,7 @@ def main() -> None:
         qmc_defects,
         roofline,
         sparse_grid_l2sea,
+        surrogate_da,
         weak_scaling,
     )
 
@@ -110,6 +119,7 @@ def main() -> None:
         ("qmc_defects_sec4.2", qmc_defects.main),
         ("mlda_tsunami_sec4.3", mlda_tsunami.main),
         ("grad_mcmc_mala", grad_mcmc.main),
+        ("surrogate_da_sec4.3", surrogate_da.main),
         ("roofline", roofline.main),
     ]
     for name, fn in benches:

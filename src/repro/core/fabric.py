@@ -36,6 +36,11 @@ with
     an evaluate at theta (and vice versa); dedupes the repeated coarse-level
     evaluations MLDA/DA subchains generate and coalesces identical in-flight
     requests into one backend call;
+  * a TRAINING TAP (`record_observer`) — every completed backend dispatch
+    streams its freshly computed (theta, output) rows to registered
+    observers exactly once (cache hits and coalesced waiters are never
+    replayed), so online surrogates (`uq.surrogate.SurrogateStore`) train
+    from traffic the sampler already paid for, with zero extra evaluations;
   * per-backend telemetry — waves, points, padding waste, busy fraction,
     cache hits, and a per-capability wave/point split — so benchmarks can
     report the paper's efficiency numbers and gradient-sampler economics.
@@ -838,6 +843,7 @@ class EvaluationFabric:
         self._stop = False
         self._wave_latency_ewma: float | None = None
         self._labels: dict[tuple, str] = {}
+        self._observers: list[Callable] = []
         self.stats = {
             "waves": 0,
             "points": 0,
@@ -845,6 +851,11 @@ class EvaluationFabric:
             "cache_misses": 0,
             "coalesced": 0,
             "direct_batches": 0,
+            # surrogate-screen economics: proposals scored by a level-(-1)
+            # surrogate instead of paying a wave, and how many survived to
+            # pay one (see `uq.surrogate.SurrogateScreen` / `note_screen`)
+            "surrogate_screened": 0,
+            "surrogate_passed": 0,
             # per-wave fill fraction accumulator: collector waves count
             # len(wave)/max_batch, explicit evaluate_batch waves are full by
             # definition (they bypass the collector cap)
@@ -901,6 +912,55 @@ class EvaluationFabric:
                 f"this fabric runs a single {self.backend.name!r} backend"
             )
         self.backend.bind(config, backends)
+
+    # -- training tap --------------------------------------------------------
+    def record_observer(self, fn: Callable) -> Callable:
+        """Register a training tap: `fn(op, thetas, outputs, config)` fires
+        once per completed backend dispatch with that wave's freshly
+        computed (theta, output) rows. Cache hits, coalesced waiters and
+        intra-batch duplicates are NOT replayed — an observer sees each
+        model evaluation EXACTLY once, so an online surrogate
+        (`uq.surrogate.SurrogateStore`) trains from fabric traffic without
+        issuing a single model evaluation of its own. Observers receive
+        private copies (shared across the observers of one wave): treat
+        them as read-only. Returns `fn` (usable as a decorator)."""
+        with self._lock:
+            self._observers.append(fn)
+        return fn
+
+    def remove_observer(self, fn: Callable) -> None:
+        with self._lock:
+            if fn in self._observers:
+                self._observers.remove(fn)
+
+    def _notify_observers(self, op, thetas, outs, config):
+        """Stream one completed wave to the training taps. Runs OUTSIDE the
+        fabric lock (observers may refit surrogates); an observer's
+        exception must never fail the wave that fed it. Observers get
+        COPIES: the original rows are already (or about to be) in callers'
+        hands, and a caller mutating its result in place must not race a
+        tap into training on corrupted pairs."""
+        if not self._observers:
+            return
+        thetas = np.array(thetas)
+        outs = np.array(outs)
+        for fn in list(self._observers):
+            try:
+                fn(op, thetas, outs, config)
+            except Exception as e:  # noqa: BLE001 — observer bug, not ours
+                warnings.warn(
+                    f"fabric observer {fn!r} raised {e!r}",
+                    RuntimeWarning, stacklevel=2,
+                )
+
+    def note_screen(self, screened: int, passed: int) -> None:
+        """Fold surrogate-screen traffic into the telemetry: `screened`
+        proposals were scored by a level-(-1) surrogate instead of paying
+        a wave, `passed` of them survived to pay one (`telemetry()` derives
+        `screen_pass_rate`)."""
+        with self._lock:
+            self.stats["surrogate_screened"] += int(screened)
+            self.stats["surrogate_passed"] += int(passed)
 
     # -- cache --------------------------------------------------------------
     def _key(self, theta: np.ndarray, config: dict | None, op: str = "evaluate",
@@ -1029,6 +1089,9 @@ class EvaluationFabric:
                         if fut is not None and not fut.done():
                             fut.set_exception(e)
                 raise
+            # tap snapshot BEFORE futures resolve (same discipline as the
+            # collector path): no waiter mutation can reach the observers
+            tap_outs = np.array(outs)
             with self._lock:
                 self.stats["waves"] += 1
                 self.stats["points"] += len(miss_order)
@@ -1041,6 +1104,9 @@ class EvaluationFabric:
                     fut = self._inflight.pop(k, None)
                     if fut is not None and not fut.done():
                         fut.set_result(out)
+            self._notify_observers(
+                "evaluate", np.stack(miss_thetas), tap_outs, config
+            )
         for i, key in enumerate(keys):
             if rows[i] is None:
                 if key in miss_rows:
@@ -1118,6 +1184,7 @@ class EvaluationFabric:
                 self._capability_bump(op, points=len(miss_order), waves=1)
                 for k, out in zip(miss_order, outs):
                     self._cache_put(k, out)
+            self._notify_observers(op, thetas[miss_idx], outs, config)
         for i, key in enumerate(keys):
             if rows[i] is None:
                 rows[i] = outs[miss_rows[key]]
@@ -1153,6 +1220,9 @@ class EvaluationFabric:
                 self._capability_bump(
                     "value_and_gradient", points=len(thetas), waves=1
                 )
+            # fused waves carry fresh forward values too — observers that
+            # train on (theta, y) pairs filter on the op themselves
+            self._notify_observers("value_and_gradient", thetas, ys, config)
             return ys, grads
         if not _backend_op_ok(self.backend, "gradient"):
             raise UnsupportedCapability(
@@ -1195,6 +1265,10 @@ class EvaluationFabric:
                     )
                     if outs.shape[0] != len(items):
                         outs = outs.T
+                    # tap snapshot BEFORE futures resolve: the original
+                    # submitter gets the raw rows and may mutate its
+                    # result in place the instant set_result runs
+                    tap_outs = np.array(outs[: len(items)])
                     with self._lock:
                         self._label_bump(items[0][1], points=len(items), waves=1)
                         self._capability_bump(
@@ -1205,6 +1279,9 @@ class EvaluationFabric:
                             self._inflight.pop(key, None)
                             if not fut.done():
                                 fut.set_result(out)
+                    self._notify_observers(
+                        "evaluate", stack, tap_outs, items[0][1]
+                    )
                 except Exception as e:  # noqa: BLE001
                     with self._lock:
                         for _, _, fut, key in items:
@@ -1237,6 +1314,10 @@ class EvaluationFabric:
         s["per_capability"] = {k: dict(v) for k, v in s["per_capability"].items()}
         looked_up = s["cache_hits"] + s["cache_misses"]
         s["cache_hit_rate"] = s["cache_hits"] / looked_up if looked_up else 0.0
+        scr = s["surrogate_screened"]
+        # fraction of surrogate-screened proposals that survived to pay a
+        # real wave; None until a screen has run (see note_screen)
+        s["screen_pass_rate"] = s["surrogate_passed"] / scr if scr else None
         s["mean_wave_size"] = s["points"] / s["waves"] if s["waves"] else 0.0
         s["max_batch"] = self.max_batch
         # mean fill fraction (0..1]: collector waves relative to the wave

@@ -17,6 +17,20 @@ Two dispatch disciplines:
   every fine acceptance test across all K chains is ONE `evaluate_batch`
   wave (reusing `uq.mcmc.batched_logpost`), so the sampling cost is ~tens
   of waves instead of thousands of round-trips.
+
+`ensemble_mlda` additionally accepts `surrogate=` — a
+`uq.surrogate.SurrogateScreen` inserted as a level-(-1) GP screen below
+level 0 (THREE-stage delayed acceptance): every level-0 proposal is first
+scored by one lockstep `predict_batch` (zero fabric waves), only stage-1
+survivors pay the coarse wave, and the stage-2 correction divides the
+coarse Metropolis ratio by the same screen ratio, so each step targets the
+coarse posterior exactly for ANY screen — a wrong GP can only waste
+evaluations, never bias an individual accept/reject. For the CHAIN-level
+guarantee, freeze the screen after warm-up (`screen.freeze()`): a screen
+that keeps training from the run's own traffic is adaptive MCMC, exact per
+step but only asymptotically safe insofar as the adaptation diminishes
+(the sliding window saturating); a frozen screen is a fixed Markov kernel
+with the standard ergodicity guarantees.
 """
 from __future__ import annotations
 
@@ -46,6 +60,10 @@ class EnsembleMLDAResult:
     n_waves: int  # batched model dispatches for the whole ensemble
     #: final level-0 proposal covariance when Haario adaptation was on
     proposal_cov: np.ndarray | None = None
+    #: surrogate-screen telemetry when three-stage DA was on (screened /
+    #: passed / pass_rate / skipped + GP fit counters — see
+    #: `uq.surrogate.SurrogateScreen.stats`)
+    surrogate: dict | None = None
 
     @property
     def samples_flat(self) -> np.ndarray:
@@ -222,11 +240,13 @@ class _EnsembleLevelSampler:
 
     def __init__(self, logpost_batches, subsampling, prop_cov, rng, K,
                  adaptive: bool = False, adapt_start: int = 50,
-                 adapt_interval: int = 1, sd: float | None = None):
+                 adapt_interval: int = 1, sd: float | None = None,
+                 surrogate=None):
         self.logposts = list(logpost_batches)
         self.subsampling = list(subsampling)
         self.rng = rng
         self.K = K
+        self.surrogate = surrogate
         self.L = len(self.logposts)
         self.chol = np.linalg.cholesky(np.atleast_2d(prop_cov))
         self.d = self.chol.shape[0]
@@ -251,9 +271,32 @@ class _EnsembleLevelSampler:
         K = len(xs)
         if level == 0:
             props = xs + self.rng.standard_normal((K, self.d)) @ self.chol.T
-            lp_props = self._lp(0, props)
-            self.tot[0] += K
-            accept = np.log(self.rng.uniform(size=K)) < lp_props - lps
+            scr = self.surrogate
+            if scr is not None:
+                # three-stage DA stage 1: the GP screen (zero fabric
+                # waves). Stage 1 promotes with prob min{1, e^dg}; stage 2
+                # divides the coarse Metropolis ratio by the SAME screen
+                # ratio, so the compound kernel targets the coarse
+                # posterior exactly for ANY screen (Christen & Fox 2005).
+                # Where the screen is inactive or variance-gated, dg = 0
+                # and the step reduces to plain lockstep Metropolis.
+                dg, skipped = scr.delta(xs, props)
+                pass1 = np.log(self.rng.uniform(size=K)) < dg
+                active = ~skipped
+                scr.note(int(active.sum()), int((pass1 & active).sum()))
+                lp_props = np.full(K, -np.inf)
+                if pass1.any():
+                    # only stage-1 survivors pay the coarse wave
+                    lp_props[pass1] = self._lp(0, props[pass1])
+                self.tot[0] += K
+                with np.errstate(invalid="ignore"):
+                    log_alpha = (lp_props - lps) - dg
+                log_alpha = np.where(np.isnan(log_alpha), -np.inf, log_alpha)
+                accept = pass1 & (np.log(self.rng.uniform(size=K)) < log_alpha)
+            else:
+                lp_props = self._lp(0, props)
+                self.tot[0] += K
+                accept = np.log(self.rng.uniform(size=K)) < lp_props - lps
             self.acc[0] += accept.sum()
             xs = np.where(accept[:, None], props, xs)
             lps = np.where(accept, lp_props, lps)
@@ -308,6 +351,7 @@ def ensemble_mlda(
     adapt_start: int = 50,
     adapt_interval: int = 1,
     adapt_sd: float | None = None,
+    surrogate=None,
 ) -> EnsembleMLDAResult:
     """K MLDA chains advanced in LOCKSTEP (paper §4.3 at fabric scale).
 
@@ -328,7 +372,18 @@ def ensemble_mlda(
     Haario-style, pooled across the lockstep chain block (the [K, d] state
     block makes the pooled empirical covariance one einsum per level-0
     step); `adapt_start` counts level-0 steps before the first refresh. The
-    final adapted covariance is reported as `proposal_cov`."""
+    final adapted covariance is reported as `proposal_cov`.
+
+    `surrogate=` (a `uq.surrogate.SurrogateScreen`, typically built with
+    `SurrogateScreen.from_fabric` so it trains online from this very run's
+    coarse traffic) inserts a level-(-1) GP screen below level 0 — THREE-
+    stage delayed acceptance: each level-0 proposal is scored by one
+    lockstep `predict_batch` (zero fabric waves), only stage-1 survivors
+    pay the coarse wave, and the stage-2 correction keeps every step exact
+    for ANY screen. Call `screen.freeze()` once warm-up traffic has
+    trained it (see the module docstring: an unfrozen screen is adaptive
+    MCMC). Screen telemetry lands in `result.surrogate` (and in
+    `fabric.telemetry()["screen_pass_rate"]` when fabric-attached)."""
     if fabric is not None:
         assert loglik is not None and level_configs is not None, (
             "fabric= requires loglik= and level_configs="
@@ -342,7 +397,7 @@ def ensemble_mlda(
     sampler = _EnsembleLevelSampler(
         logpost_batches, subsampling, prop_cov, rng, K,
         adaptive=adaptive, adapt_start=adapt_start,
-        adapt_interval=adapt_interval, sd=adapt_sd,
+        adapt_interval=adapt_interval, sd=adapt_sd, surrogate=surrogate,
     )
     top = len(logpost_batches) - 1
     lps = sampler._lp(top, xs)
@@ -358,6 +413,7 @@ def ensemble_mlda(
         out, rates, list(sampler.evals), sampler.waves,
         proposal_cov=None if sampler.adapter is None
         else sampler.adapter.proposal_cov(),
+        surrogate=None if surrogate is None else surrogate.stats(),
     )
 
 

@@ -1,0 +1,95 @@
+"""Statistical exactness harness shared by sampler tests.
+
+Sampler tests used to assert moments with hand-tuned absolute tolerances —
+too tight and they flake, too loose and they pass on a biased kernel. This
+harness bounds the first two posterior moments against ANALYTIC values with
+Monte-Carlo-error-aware tolerances: standard errors are computed from the
+pooled effective sample size, so the margin tracks how long the test
+actually ran, and `z` sigmas of MC noise set the flake probability
+explicitly (~1e-6 per moment at z=5 for a CORRECT sampler, while a kernel
+whose bias exceeds the MC error still fails deterministically as the chain
+grows). Used by the three-stage DA tests and retrofitted onto the ensemble
+MLDA statistics test.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.uq.mcmc import effective_sample_size
+
+
+def pooled_ess(samples: np.ndarray) -> np.ndarray:
+    """Per-dimension ESS summed over chains: [K, n, d] (or [n, d]) -> [d]."""
+    x = np.asarray(samples, float)
+    if x.ndim == 2:
+        x = x[None]
+    K, _, d = x.shape
+    return np.asarray(
+        [sum(effective_sample_size(x[k, :, j]) for k in range(K)) for j in range(d)]
+    )
+
+
+def assert_moments(
+    samples: np.ndarray,
+    mean_ref,
+    var_ref,
+    *,
+    burn_frac: float = 0.2,
+    z: float = 5.0,
+    min_ess: float = 50.0,
+    label: str = "sampler",
+) -> dict:
+    """Bound pooled mean and variance against analytic references.
+
+    samples: [K, n, d] or [n, d]; the first `burn_frac` of every chain is
+    discarded. With ess_j the pooled per-dimension ESS,
+
+        |mean_j - mean_ref_j| <= z * sqrt(var_ref_j / ess_j)
+        |var_j  - var_ref_j|  <= z * var_ref_j * sqrt(2 / ess_j)
+
+    (the Gaussian fourth-moment approximation for the variance error). The
+    harness refuses to certify chains too short to say anything
+    (`min_ess`): a vacuously wide bound is a bug, not a pass. Returns the
+    diagnostics for callers that want to report them.
+    """
+    x = np.asarray(samples, float)
+    if x.ndim == 2:
+        x = x[None]
+    K, n, d = x.shape
+    x = x[:, int(burn_frac * n):]
+    ess = pooled_ess(x)
+    mean_ref = np.broadcast_to(np.asarray(mean_ref, float), (d,))
+    var_ref = np.broadcast_to(np.asarray(var_ref, float), (d,))
+    assert np.all(ess >= min_ess), (
+        f"{label}: chains too short to bound moments "
+        f"(pooled ESS {np.round(ess, 1)} < {min_ess}); run longer"
+    )
+    flat = x.reshape(-1, d)
+    mean, var = flat.mean(axis=0), flat.var(axis=0)
+    se_mean = np.sqrt(var_ref / ess)
+    se_var = var_ref * np.sqrt(2.0 / ess)
+    mean_err = np.abs(mean - mean_ref)
+    var_err = np.abs(var - var_ref)
+    assert np.all(mean_err <= z * se_mean), (
+        f"{label}: posterior MEAN off by {np.round(mean_err, 4)} "
+        f"(allowed {np.round(z * se_mean, 4)} at z={z}, ESS {np.round(ess, 1)})"
+    )
+    assert np.all(var_err <= z * se_var), (
+        f"{label}: posterior VARIANCE off by {np.round(var_err, 4)} "
+        f"(allowed {np.round(z * se_var, 4)} at z={z}, ESS {np.round(ess, 1)})"
+    )
+    return {"ess": ess, "mean": mean, "var": var,
+            "se_mean": se_mean, "se_var": se_var}
+
+
+def sample_until(extend, min_ess: float = 300.0, max_rounds: int = 4) -> np.ndarray:
+    """Draw in rounds until every dimension's pooled ESS clears `min_ess`
+    (or `max_rounds` is exhausted — `assert_moments` then decides whether
+    the chain is long enough). `extend()` must return a [K, n, d] block of
+    NEW samples continuing the same chains."""
+    chunks = [np.asarray(extend(), float)]
+    while len(chunks) < max_rounds:
+        if pooled_ess(np.concatenate(chunks, axis=1)).min() >= min_ess:
+            break
+        chunks.append(np.asarray(extend(), float))
+    return np.concatenate(chunks, axis=1)

@@ -3,9 +3,16 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.uq.distributions import Beta, Normal, Triangular, TruncatedNormal, Uniform
+from repro.uq.distributions import (
+    Beta,
+    MultivariateNormal,
+    Normal,
+    Triangular,
+    TruncatedNormal,
+    Uniform,
+)
 from repro.uq.gp import GP
-from repro.uq.kde import kde
+from repro.uq.kde import kde, silverman_bandwidth
 from repro.uq.mcmc import effective_sample_size, gelman_rubin, random_walk_metropolis
 from repro.uq.mlda import delayed_acceptance, mlda
 from repro.uq.monte_carlo import monte_carlo
@@ -48,6 +55,34 @@ def test_sampling_moments(dist, rng):
     xs = np.linspace(lo, hi, 20001)
     mean_ref = np.trapezoid(xs * dist.pdf(xs), xs)
     assert abs(s.mean() - mean_ref) < 0.05 * (hi - lo)
+
+
+@pytest.mark.parametrize("dist", DISTS, ids=lambda d: type(d).__name__)
+def test_logpdf_never_nan_on_boundary_inputs(dist):
+    """log-pdf on support endpoints and outside points: finite or -inf,
+    NEVER NaN (a NaN log-density silently poisons an MH accept ratio)."""
+    lo, hi = dist.support()
+    w = hi - lo
+    pts = np.array([lo, hi, lo + 0.5 * w, lo - 0.5 * w, hi + 0.5 * w])
+    lp = dist.logpdf(pts)
+    assert not np.any(np.isnan(lp)), lp
+    assert np.isfinite(lp[2])  # interior density is strictly positive
+    if isinstance(dist, (Uniform, Beta, Triangular, TruncatedNormal)):
+        # compact support: outside points are exactly -inf, not garbage
+        assert lp[3] == -np.inf and lp[4] == -np.inf
+
+
+def test_multivariate_normal_logpdf_matches_univariate(rng):
+    mvn = MultivariateNormal((0.5,), (2.0,))
+    ref = Normal(0.5, np.sqrt(2.0))
+    xs = np.linspace(-3.0, 4.0, 7)
+    np.testing.assert_allclose(
+        mvn.logpdf(xs[:, None]), ref.logpdf(xs), rtol=1e-9, atol=1e-12
+    )
+    assert np.ndim(mvn.logpdf([0.1])) == 0  # single point -> scalar
+    s = mvn.sample(rng, 4000)
+    assert abs(s.mean() - 0.5) < 0.1
+    assert abs(s.var() - 2.0) < 0.25
 
 
 # -- Sobol --------------------------------------------------------------------
@@ -143,6 +178,26 @@ def test_kde_integral_and_positive_support(rng):
     assert abs(np.trapezoid(d, p) - 1.0) < 0.02
 
 
+def test_kde_bandwidth_selection_on_gaussian_mixture(rng):
+    """Silverman's rule on a known bimodal mixture: the selected bandwidth
+    must be positive and narrow enough that the KDE keeps both modes
+    separated (a spread-scale bandwidth would merge them), while the
+    density still normalizes."""
+    n = 4000
+    comp = rng.uniform(size=n) < 0.5
+    s = np.where(comp, rng.normal(-2.0, 0.5, n), rng.normal(2.0, 0.5, n))
+    h = silverman_bandwidth(s)
+    assert 0.0 < h < np.std(s)
+    d, p = kde(s, n_points=400)  # bandwidth=None -> Silverman
+    assert abs(np.trapezoid(d, p) - 1.0) < 0.02
+    modes = np.interp([-2.0, 2.0], p, d)
+    valley = np.interp(0.0, p, d)
+    assert min(modes) > 2.0 * valley  # bimodality recovered
+    # an explicit narrower bandwidth sharpens the modes further
+    d_sharp, p_sharp = kde(s, bandwidth=0.1, n_points=400)
+    assert np.interp(-2.0, p_sharp, d_sharp) > 0.95 * np.interp(-2.0, p, d)
+
+
 # -- GP -----------------------------------------------------------------------
 
 
@@ -161,6 +216,37 @@ def test_gp_ard_lengthscales_detect_irrelevant_dim(rng):
     gp = GP.fit(X, y, n_iters=300)
     ls = np.exp(gp.log_params[:2])
     assert ls[1] > 1.5 * ls[0]  # ARD: irrelevant dim gets longer lengthscale
+
+
+def test_gp_predict_variance_floor_on_degenerate_training(rng):
+    """Regression: on a near-degenerate training set (every point repeated
+    three times) the Schur complement amp - v^T v is pure round-off at the
+    training points and used to come back 0 or slightly negative — and a
+    DA screen that takes log/sqrt of the predictive variance NaNs on it.
+    The variance must now be strictly positive with a finite log."""
+    base = rng.uniform(-1, 1, (10, 2))
+    X = np.repeat(base, 3, axis=0)
+    y = np.sin(2 * X[:, 0]) + X[:, 1]
+    gp = GP.fit(X, y, n_iters=150)
+    mu, var = gp.predict(np.vstack([base, [[0.0, 0.0]], [[5.0, -5.0]]]),
+                         return_var=True)
+    assert np.all(var > 0)
+    assert np.all(np.isfinite(np.log(var)))
+    assert np.all(np.isfinite(mu))
+
+
+def test_gp_from_params_matches_fit_factorization(rng):
+    """The online refit path (fixed hyperparameters, one fresh Cholesky)
+    must reproduce the offline fit exactly on the same window."""
+    X = rng.uniform(-1, 1, (30, 2))
+    y = np.cos(3 * X[:, 0]) * X[:, 1]
+    gp = GP.fit(X, y, n_iters=150)
+    gp2 = GP.from_params(X, y, gp.log_params)
+    Xq = rng.uniform(-1, 1, (15, 2))
+    np.testing.assert_allclose(gp.predict(Xq), gp2.predict(Xq), rtol=1e-10)
+    m1, v1 = gp.predict(Xq, return_var=True)
+    m2, v2 = gp2.predict(Xq, return_var=True)
+    np.testing.assert_allclose(v1, v2, rtol=1e-8)
 
 
 # -- MCMC / MLDA ----------------------------------------------------------------
