@@ -1,0 +1,139 @@
+"""Race-detector stress smoke: perturbed-schedule fabric stress + the
+instrumented-lock overhead budget.
+
+Runs `repro.analysis.stress.run_stress` (exactly-once tap delivery,
+router steal under concurrent waves, pool shutdown races — all under an
+activated `LockMonitor` with schedule perturbation) and then measures
+what the instrumentation itself costs on the lockstep evaluate_batch
+path: the same single-driver wave workload timed against a plain fabric
+and against one whose locks were built inside `monitored(...)` (with
+perturbation DISABLED, so the number is pure bookkeeping overhead, not
+injected jitter). The design target is < 5% on the lockstep path; the
+smoke asserts a loose 25% bar because shared CI machines are noisy, and
+records both numbers in the artifact.
+
+    PYTHONPATH=src python -m benchmarks.race_stress [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.analysis.races import LockMonitor, monitored
+from repro.analysis.stress import run_stress
+from repro.core.fabric import CallableBackend, EvaluationFabric
+
+#: design target for instrumentation overhead on the lockstep path
+OVERHEAD_TARGET = 0.05
+#: what the smoke actually asserts (CI machines are noisy)
+OVERHEAD_SMOKE_BAR = 0.25
+
+
+def _square(thetas):
+    return (np.asarray(thetas) ** 2).sum(axis=1, keepdims=True)
+
+
+def _lockstep_workload(fabric: EvaluationFabric, n_waves: int, n_points: int) -> float:
+    """One lockstep driver issuing full waves — the ensemble-MCMC traffic
+    shape — against `fabric`; returns wall seconds."""
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((n_points, 2))
+    t0 = time.perf_counter()
+    for _ in range(n_waves):
+        fabric.evaluate_batch(X + rng.standard_normal((n_points, 2)))
+    return time.perf_counter() - t0
+
+
+def _measure_overhead(n_waves: int, n_points: int, repeats: int = 3) -> dict:
+    """Best-of-`repeats`, alternating plain/instrumented so drift in the
+    machine's load hits both variants equally."""
+    plain_s = []
+    mon_s = []
+    for _ in range(repeats):
+        fab = EvaluationFabric(CallableBackend(_square), cache_size=0)
+        try:
+            plain_s.append(_lockstep_workload(fab, n_waves, n_points))
+        finally:
+            fab.shutdown()
+        monitor = LockMonitor(perturb=False)
+        with monitored(monitor):
+            fab = EvaluationFabric(CallableBackend(_square), cache_size=0)
+        try:
+            mon_s.append(_lockstep_workload(fab, n_waves, n_points))
+        finally:
+            fab.shutdown()
+    best_plain, best_mon = min(plain_s), min(mon_s)
+    return {
+        "n_waves": n_waves,
+        "n_points": n_points,
+        "plain_s": round(best_plain, 4),
+        "monitored_s": round(best_mon, 4),
+        "overhead_frac": round((best_mon - best_plain) / best_plain, 4),
+        "target_frac": OVERHEAD_TARGET,
+        "smoke_bar_frac": OVERHEAD_SMOKE_BAR,
+    }
+
+
+def main(smoke: bool = True, threads: int = 8, seed: int = 0) -> dict:
+    stress = run_stress(n_threads=threads, seed=seed, perturb=True)
+    n_waves, n_points = (60, 64) if smoke else (300, 64)
+    overhead = _measure_overhead(n_waves, n_points)
+    doc = {
+        "schema": "race-stress-v1",
+        "created_unix": time.time(),
+        "smoke": smoke,
+        "stress": stress,
+        "overhead": overhead,
+    }
+    mon = stress["monitor"]
+    print(
+        f"race stress: {'passed' if stress['passed'] else 'FAILED'} "
+        f"({threads} threads, {mon['acquisitions']} acquisitions over "
+        f"{len(mon['locks'])} locks, {len(mon['lock_order_cycles'])} "
+        f"cycle(s), {len(mon['unguarded_writes'])} unguarded write(s)); "
+        f"instrumentation overhead {overhead['overhead_frac']:+.1%} "
+        f"(target < {OVERHEAD_TARGET:.0%})"
+    )
+    return doc
+
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer overhead waves)")
+    ap.add_argument("--threads", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the stress + overhead telemetry document")
+    args = ap.parse_args()
+    doc = main(smoke=args.smoke, threads=args.threads, seed=args.seed)
+    if args.json:
+        # write BEFORE the asserts: a failing smoke's artifact is exactly
+        # what the investigation needs
+        Path(args.json).write_text(json.dumps(doc, indent=1))
+        print(f"telemetry -> {args.json}")
+    if not doc["stress"]["passed"]:
+        bad = {
+            name: s["violations"]
+            for name, s in doc["stress"]["scenarios"].items()
+            if not s["passed"]
+        }
+        raise SystemExit(
+            "race stress FAILED: "
+            + (json.dumps(bad) if bad else "lock-order cycles or unguarded "
+               f"writes: {json.dumps(doc['stress']['monitor'])}")
+        )
+    if doc["overhead"]["overhead_frac"] > OVERHEAD_SMOKE_BAR:
+        raise SystemExit(
+            f"instrumented-lock overhead {doc['overhead']['overhead_frac']:.1%} "
+            f"exceeds even the loose smoke bar {OVERHEAD_SMOKE_BAR:.0%} "
+            f"(design target {OVERHEAD_TARGET:.0%})"
+        )
+
+
+if __name__ == "__main__":
+    _cli()

@@ -1,0 +1,30 @@
+"""repro.analysis — correctness tooling: invariant linter + race detector.
+
+Two halves:
+
+* `repro.analysis.lint` / `repro.analysis.rules` — an AST linter
+  enforcing the five project invariants (capability conformance, wave
+  discipline, exactness discipline, JAX discipline, lock discipline).
+  CLI: ``python -m repro.analysis src/repro``.
+* `repro.analysis.races` / `repro.analysis.stress` — instrumented locks,
+  lock-order cycle detection, unguarded-write auditing, and the
+  schedule-perturbing stress harness for the fabric stack.
+"""
+from repro.analysis.common import Finding, RULE_IDS
+from repro.analysis.lint import (
+    DEFAULT_BASELINE,
+    apply_baseline,
+    load_baseline,
+    run_lint,
+    write_baseline,
+)
+
+__all__ = [
+    "Finding",
+    "RULE_IDS",
+    "run_lint",
+    "load_baseline",
+    "write_baseline",
+    "apply_baseline",
+    "DEFAULT_BASELINE",
+]

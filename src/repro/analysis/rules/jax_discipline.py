@@ -1,0 +1,308 @@
+"""JAX discipline: no host-sync or recompile storms in jitted code.
+
+Three sub-checks, matching the failure modes that actually bite:
+
+* **host-sync in jit** — `float(x)` / `int(x)` / `bool(x)` / `.item()` /
+  `.tolist()` on a traced value, or Python `if`/`while` branching on one,
+  inside a ``@jax.jit`` body: these force a concretization error (or a
+  silent device sync) at trace time. Parameters named in
+  ``static_argnames`` are not traced and are exempt; so are shape/dtype
+  accesses (`x.ndim`, `x.shape`, `len(x)`), which are static under jit.
+  Traced-ness is propagated from the parameters through simple
+  assignments.
+
+* **jit-in-loop** — `jax.jit(...)` constructed lexically inside a
+  `for`/`while` body compiles a fresh executable every iteration (the
+  recompile storm); hoist it or cache per config like
+  `ModelPool._dispatch_fn` does.
+
+* **fd-x64** — finite-difference code (`*fd*` functions) that forces
+  float32 without an x64 guard: FD step sizes below ~1e-4 underflow the
+  difference in single precision, so FD code must either stay in float64
+  or consult `jax.config.x64_enabled`.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import FileCtx, Finding, dotted
+
+JIT_NAMES = {"jax.jit", "pjit", "jax.pmap"}
+SHAPE_ATTRS = {"ndim", "shape", "dtype", "size"}
+CAST_FNS = {"float", "int", "bool"}
+SYNC_METHODS = {"item", "tolist"}
+
+
+def _imports_jax(tree: ast.AST) -> tuple[bool, bool]:
+    """(imports jax at all, `jit` imported bare from jax)."""
+    has_jax = bare_jit = False
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == "jax" or a.name.startswith("jax.") for a in node.names):
+                has_jax = True
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and node.module.split(".")[0] == "jax":
+                has_jax = True
+                if any((a.asname or a.name) == "jit" for a in node.names):
+                    bare_jit = True
+    return has_jax, bare_jit
+
+
+def _is_jit_callable(node: ast.AST, bare_jit: bool) -> bool:
+    name = dotted(node)
+    if name in JIT_NAMES:
+        return True
+    return bare_jit and name == "jit"
+
+
+def _jit_call_statics(call: ast.Call, bare_jit: bool):
+    """If `call` constructs a jit transform — `jax.jit(...)` or
+    `partial(jax.jit, ...)` — return its static_argnames (else None)."""
+    if _is_jit_callable(call.func, bare_jit):
+        return _statics_from_keywords(call.keywords)
+    fn = dotted(call.func)
+    if fn in ("partial", "functools.partial") and call.args:
+        if _is_jit_callable(call.args[0], bare_jit):
+            return _statics_from_keywords(call.keywords)
+    return None
+
+
+def _statics_from_keywords(keywords) -> set[str]:
+    statics: set[str] = set()
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                statics.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                for elt in v.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(elt.value, str):
+                        statics.add(elt.value)
+    return statics
+
+
+def _tainted_names(node: ast.AST, tainted: set[str]) -> set[str]:
+    """Tainted Names referenced under `node`, EXCLUDING static accesses
+    (shape/dtype/ndim/len) whose result is concrete under jit."""
+    found: set[str] = set()
+
+    def walk(n: ast.AST) -> None:
+        if isinstance(n, ast.Attribute) and n.attr in SHAPE_ATTRS:
+            return  # x.shape et al. are static under trace
+        if isinstance(n, ast.Call) and dotted(n.func) == "len":
+            return
+        if isinstance(n, ast.Name) and n.id in tainted:
+            found.add(n.id)
+        for child in ast.iter_child_nodes(n):
+            walk(child)
+
+    walk(node)
+    return found
+
+
+class _JitBodyChecker:
+    """Host-sync checks inside one jitted function."""
+
+    def __init__(self, rule: str, ctx: FileCtx, func, statics: set[str], symbol: str):
+        self.rule = rule
+        self.ctx = ctx
+        self.func = func
+        self.symbol = f"{symbol}.{func.name}" if symbol != "<module>" else func.name
+        args = func.args
+        params = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+        self.tainted = {p for p in params if p not in statics and p != "self"}
+
+    def _propagate(self) -> None:
+        # two fixed-point-ish passes are plenty for straight-line bodies
+        for _ in range(2):
+            for node in ast.walk(self.func):
+                if isinstance(node, ast.Assign):
+                    if _tainted_names(node.value, self.tainted):
+                        for tgt in node.targets:
+                            for n in ast.walk(tgt):
+                                if isinstance(n, ast.Name):
+                                    self.tainted.add(n.id)
+                elif isinstance(node, ast.AugAssign):
+                    if isinstance(node.target, ast.Name) and _tainted_names(
+                        node.value, self.tainted
+                    ):
+                        self.tainted.add(node.target.id)
+
+    def run(self) -> list[Finding]:
+        self._propagate()
+        findings: list[Finding] = []
+
+        def flag(node: ast.AST, message: str) -> None:
+            findings.append(Finding(
+                self.rule, self.ctx.relpath, node.lineno, self.symbol, message
+            ))
+
+        for node in ast.walk(self.func):
+            if isinstance(node, ast.Call):
+                fn = dotted(node.func)
+                if fn in CAST_FNS and node.args:
+                    hit = _tainted_names(node.args[0], self.tainted)
+                    if hit:
+                        flag(node, f"{fn}() on traced value "
+                                   f"{sorted(hit)[0]!r} inside a jitted body "
+                                   f"forces a host sync / concretization error")
+                elif (
+                    isinstance(node.func, ast.Attribute)
+                    and node.func.attr in SYNC_METHODS
+                    and _tainted_names(node.func.value, self.tainted)
+                ):
+                    flag(node, f".{node.func.attr}() on a traced value inside "
+                               f"a jitted body forces a host sync")
+            elif isinstance(node, (ast.If, ast.While)):
+                hit = _tainted_names(node.test, self.tainted)
+                if hit:
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    flag(node, f"Python `{kind}` branching on traced value "
+                               f"{sorted(hit)[0]!r} inside a jitted body — "
+                               f"use jnp.where / lax.cond")
+        return findings
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rule: str, ctx: FileCtx, bare_jit: bool):
+        self.rule = rule
+        self.ctx = ctx
+        self.bare_jit = bare_jit
+        self.loop_depth = 0
+        self.findings: list[Finding] = []
+        self.jitted: list[tuple] = []  # (func_node, statics, enclosing symbol)
+        self._defs_by_name: dict[str, list] = {}
+        self._scope: list[str] = []
+
+    @property
+    def symbol(self) -> str:
+        return ".".join(self._scope) if self._scope else "<module>"
+
+    # -- collection ---------------------------------------------------------
+    def _handle_func(self, node) -> None:
+        self._defs_by_name.setdefault(node.name, []).append((node, self.symbol))
+        statics: set[str] = set()
+        is_jitted = False
+        for dec in node.decorator_list:
+            if _is_jit_callable(dec, self.bare_jit):
+                is_jitted = True
+            elif isinstance(dec, ast.Call):
+                got = _jit_call_statics(dec, self.bare_jit)
+                if got is not None:
+                    is_jitted = True
+                    statics |= got
+        if is_jitted:
+            self.jitted.append((node, statics, self.symbol))
+        self._scope.append(node.name)
+        try:
+            self.generic_visit(node)
+        finally:
+            self._scope.pop()
+
+    visit_FunctionDef = _handle_func
+    visit_AsyncFunctionDef = _handle_func
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._scope.append(node.name)
+        try:
+            self.generic_visit(node)
+        finally:
+            self._scope.pop()
+
+    def _handle_loop(self, node) -> None:
+        self.loop_depth += 1
+        try:
+            self.generic_visit(node)
+        finally:
+            self.loop_depth -= 1
+
+    visit_For = _handle_loop
+    visit_AsyncFor = _handle_loop
+    visit_While = _handle_loop
+
+    def visit_Call(self, node: ast.Call) -> None:
+        statics = _jit_call_statics(node, self.bare_jit)
+        if statics is not None:
+            if self.loop_depth > 0:
+                self.findings.append(Finding(
+                    self.rule, self.ctx.relpath, node.lineno, self.symbol,
+                    "jax.jit constructed inside a loop body — every iteration "
+                    "compiles a fresh executable (recompile storm); hoist or "
+                    "cache per config",
+                ))
+            # `jitted = jax.jit(fn)`: resolve fn to its def(s) by name
+            if (
+                _is_jit_callable(node.func, self.bare_jit)
+                and node.args
+                and isinstance(node.args[0], ast.Name)
+            ):
+                for func, sym in self._defs_by_name.get(node.args[0].id, []):
+                    self.jitted.append((func, statics, sym))
+        self.generic_visit(node)
+
+
+class JaxDisciplineRule:
+    rule = "jax"
+
+    def visit_file(self, ctx: FileCtx) -> list[Finding]:
+        has_jax, bare_jit = _imports_jax(ctx.tree)
+        if not has_jax:
+            return []
+        v = _Visitor(self.rule, ctx, bare_jit)
+        v.visit(ctx.tree)
+        findings = list(v.findings)
+        seen_funcs: set[int] = set()
+        for func, statics, symbol in v.jitted:
+            if id(func) in seen_funcs:
+                continue
+            seen_funcs.add(id(func))
+            findings.extend(_JitBodyChecker(self.rule, ctx, func, statics, symbol).run())
+        findings.extend(self._check_fd_x64(ctx))
+        return findings
+
+    # -- fd-x64 -------------------------------------------------------------
+    def _check_fd_x64(self, ctx: FileCtx) -> list[Finding]:
+        if "x64" in ctx.source:
+            # module consults the x64 switch somewhere — trust it
+            module_guarded = True
+        else:
+            module_guarded = False
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            name = node.name.lower()
+            if "fd" not in name.replace("_", " ").split() and "finite" not in name:
+                continue
+            if module_guarded:
+                continue
+            for sub in ast.walk(node):
+                bad = None
+                if isinstance(sub, ast.Call):
+                    fn = dotted(sub.func)
+                    if fn in ("np.float32", "jnp.float32", "numpy.float32"):
+                        bad = fn
+                    elif (
+                        isinstance(sub.func, ast.Attribute)
+                        and sub.func.attr == "astype"
+                        and sub.args
+                    ):
+                        a = sub.args[0]
+                        if (
+                            isinstance(a, ast.Constant) and a.value == "float32"
+                        ) or dotted(a) in ("np.float32", "jnp.float32"):
+                            bad = "astype(float32)"
+                elif isinstance(sub, ast.Attribute) and dotted(sub) in (
+                    "np.float32", "jnp.float32"
+                ):
+                    bad = dotted(sub)
+                if bad:
+                    findings.append(Finding(
+                        self.rule, ctx.relpath, sub.lineno, node.name,
+                        f"finite-difference code forces {bad} with no x64 "
+                        f"guard — FD steps underflow in single precision",
+                    ))
+        return findings
+
+    def finish(self) -> list[Finding]:
+        return []

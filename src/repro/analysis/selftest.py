@@ -1,0 +1,280 @@
+"""Per-rule fixture snippets proving each rule fires (and does not).
+
+Used two ways:
+
+* ``python -m repro.analysis --selftest`` (the CI gate runs it): every
+  rule must flag its "bad" fixture and stay silent on its "good"
+  fixture — an injected violation of each rule class demonstrably fails.
+* `tests/test_analysis.py` parametrizes over the same fixtures and adds
+  harder false-positive lookalikes.
+
+Fixture file names matter: scope-limited rules (wave, exactness) only
+fire on matching module paths, so fixtures are written under those
+relative names inside a temp tree.
+"""
+from __future__ import annotations
+
+import tempfile
+from pathlib import Path
+
+from repro.analysis.lint import run_lint
+
+FIXTURES: dict[str, dict] = {
+    "capability": {
+        "bad": {
+            "src/repro/apps/fixture_models.py": '''
+class Model:
+    def evaluate_batch(self, thetas, config=None):
+        return [self(t, config) for t in thetas]
+    def gradient_batch(self, thetas, senss, config=None):
+        return thetas
+
+
+class OverAdvertised(Model):
+    """Advertises gradient_batch; only the base-class FD loop exists."""
+    def capabilities(self, config=None):
+        return Capabilities(evaluate=True, gradient_batch=True)
+    def __call__(self, parameters, config=None):
+        return parameters
+
+
+class UnderAdvertised(Model):
+    """Native gradient_batch, not advertised."""
+    def capabilities(self, config=None):
+        return Capabilities(evaluate=True)
+    def __call__(self, parameters, config=None):
+        return parameters
+    def gradient_batch(self, thetas, senss, config=None):
+        return senss
+''',
+        },
+        "good": {
+            "src/repro/apps/fixture_models.py": '''
+class Model:
+    def evaluate_batch(self, thetas, config=None):
+        return [self(t, config) for t in thetas]
+
+
+class Conformant(Model):
+    def capabilities(self, config=None):
+        return Capabilities(evaluate=True, evaluate_batch=True, gradient=True)
+    def __call__(self, parameters, config=None):
+        return parameters
+    def evaluate_batch(self, thetas, config=None):
+        return thetas
+    def gradient(self, out_wrt, in_wrt, parameters, sens, config=None):
+        return sens
+
+
+class Negotiated(Model):
+    """Dynamic capabilities (HTTP negotiation) — statically unverifiable."""
+    def capabilities(self, config=None):
+        return self._caps
+''',
+        },
+        "expect_min": 2,
+    },
+    "wave": {
+        "bad": {
+            "src/repro/uq/mcmc.py": '''
+def shattered_wave(model, thetas):
+    outs = [model(t) for t in thetas]
+    for t in thetas:
+        outs.append(model.evaluate(t))
+    return outs
+''',
+        },
+        "good": {
+            # host-side per-point loops (priors) are fine even in scope...
+            "src/repro/uq/mcmc.py": '''
+def prior_scan(logprior, thetas, fabric):
+    pr = [float(logprior(t)) for t in thetas]
+    ys = fabric.evaluate_batch(thetas)
+    return pr, ys
+''',
+            # ...and the base-class fallback module is outside the scope
+            "src/repro/core/interface.py": '''
+class Model:
+    def evaluate_batch(self, thetas, config=None):
+        return [self.model(t, config) for t in thetas]
+''',
+        },
+        "expect_min": 2,
+    },
+    "exactness": {
+        "bad": {
+            "src/repro/uq/helper.py": '''
+import numpy as np
+
+
+def jitter(thetas):
+    return thetas + np.random.normal(size=len(thetas))
+
+
+def fresh_rng():
+    return np.random.default_rng()
+''',
+        },
+        "good": {
+            "src/repro/uq/helper.py": '''
+import random
+
+import numpy as np
+
+
+def jitter(thetas, rng):
+    return thetas + rng.normal(size=len(thetas))
+
+
+def make_rng(seed):
+    return np.random.default_rng(seed)
+
+
+def perturbation_source(seed):
+    return random.Random(seed)
+''',
+        },
+        "expect_min": 2,
+    },
+    "jax": {
+        "bad": {
+            "src/repro/models/fixture_jax.py": '''
+import jax
+import numpy as np
+
+
+@jax.jit
+def hostsync(x):
+    if x > 0:
+        return float(x)
+    return x
+
+
+def recompile_storm(xs):
+    outs = []
+    for x in xs:
+        g = jax.jit(lambda t: t * 2)
+        outs.append(g(x))
+    return outs
+
+
+def _fd_gradient(f, theta):
+    theta = np.asarray(theta, np.float32)
+    return f(theta)
+''',
+        },
+        "good": {
+            "src/repro/models/fixture_jax.py": '''
+import jax
+import jax.numpy as jnp
+import numpy as np
+from functools import partial
+
+_JIT_CACHE = {}
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def staged(x, mode):
+    if mode == "fast":
+        return x * 2
+    return jnp.where(x > 0, x, -x)
+
+
+def cached(xs, key):
+    if key not in _JIT_CACHE:
+        _JIT_CACHE[key] = jax.jit(lambda t: t * 2)
+    fn = _JIT_CACHE[key]
+    return [fn(x) for x in xs]
+
+
+def _fd_gradient(f, theta):
+    # float64 honoring jax.config.x64_enabled elsewhere in this module
+    dtype = np.float64 if jax.config.x64_enabled else np.float32
+    return f(np.asarray(theta, dtype))
+''',
+        },
+        "expect_min": 3,
+    },
+    "locks": {
+        "bad": {
+            "src/repro/core/fixture_locks.py": '''
+import threading
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.stats = {"waves": 0}
+
+    def bump_guarded(self):
+        with self._lock:
+            self.stats["waves"] += 1
+
+    def bump_racy(self):
+        self.stats["waves"] += 1
+''',
+        },
+        "good": {
+            "src/repro/core/fixture_locks.py": '''
+import threading
+
+
+class Telemetry:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.stats = {"waves": 0}
+
+    def bump(self):
+        with self._lock:
+            self._bump()
+
+    def _bump(self):  # caller holds the lock
+        self.stats["waves"] += 1
+
+
+class SingleThreaded:
+    """Owns no lock — out of this rule's scope by design."""
+
+    def __init__(self):
+        self.stats = {"calls": 0}
+
+    def bump(self):
+        self.stats["calls"] += 1
+''',
+        },
+        "expect_min": 1,
+    },
+}
+
+
+def _materialize(tree: dict[str, str], root: Path) -> None:
+    for rel, src in tree.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+
+
+def run_selftest() -> dict:
+    """Inject one violation per rule class; verify detection AND silence.
+
+    Returns ``{"passed": bool, "rules": {rule: {...}}}``.
+    """
+    report: dict = {"schema": "repro-analysis-selftest-v1", "rules": {}, "passed": True}
+    for rule, spec in FIXTURES.items():
+        entry: dict = {}
+        with tempfile.TemporaryDirectory(prefix=f"repro-lint-{rule}-") as td:
+            root = Path(td)
+            _materialize(spec["bad"], root)
+            bad = [f for f in run_lint([root], rules=[rule], root=root) if f.rule == rule]
+            entry["bad_findings"] = len(bad)
+            entry["detects"] = len(bad) >= spec["expect_min"]
+        with tempfile.TemporaryDirectory(prefix=f"repro-lint-{rule}-") as td:
+            root = Path(td)
+            _materialize(spec["good"], root)
+            good = [f for f in run_lint([root], rules=[rule], root=root) if f.rule == rule]
+            entry["false_positives"] = [str(f) for f in good]
+            entry["clean_on_good"] = not good
+        entry["passed"] = entry["detects"] and entry["clean_on_good"]
+        report["rules"][rule] = entry
+        report["passed"] = report["passed"] and entry["passed"]
+    return report

@@ -1,0 +1,408 @@
+"""Schedule-perturbing stress harness for the fabric stack.
+
+Three scenarios drive the known-concurrent surfaces under an activated
+`LockMonitor` (every production lock built through the `named_*`
+factories is instrumented, acquisitions are jittered to shake out
+interleavings), then the monitor's global view is checked:
+
+* **tap_exactly_once** — >= 8 threads mix `EvaluationFabric.submit` and
+  `evaluate_batch` over a small overlapping theta universe with an LRU
+  cache smaller than the universe (so evictions force recomputation),
+  while a counting observer and a `SurrogateStore` -> `OnlineGP` tap ride
+  the wave stream. Asserts the tap's exactly-once property (per-theta
+  observed rows == per-theta backend computations — no replayed cache
+  hits, no dropped waves) and telemetry-counter consistency
+  (cache_hits + cache_misses + coalesced == rows requested,
+  points == rows computed), plus result correctness for every caller.
+
+* **router_steal** — a `FabricRouter` over two `ThreadedPool` backends;
+  one pool is shut down while caller threads hammer waves. Every wave
+  must still return correct rows (the router backs the dead pool off and
+  steals its shard) and at least one steal must be observed.
+
+* **pool_shutdown** — repeated rounds of submit-hammering threads racing
+  a randomly-timed `ThreadedPool.shutdown()`. Every accepted future must
+  resolve (result or error — never hang), and submits after shutdown
+  must raise.
+
+The harness FAILS (report["passed"] is False) on any scenario violation,
+any lock-order cycle, or any unguarded shared-field write. CLI:
+``python -m repro.analysis --stress [--threads N] [--seed S] [--no-perturb]``.
+"""
+from __future__ import annotations
+
+import random
+import threading
+import time
+from concurrent.futures import wait as futures_wait
+
+import numpy as np
+
+from repro.analysis.races import GuardedDict, LockMonitor, monitored, watch_fields
+from repro.core.fabric import (
+    CallableBackend,
+    EvaluationFabric,
+    FabricRouter,
+    ThreadedBackend,
+)
+from repro.core.interface import Model
+from repro.core.pool import ThreadedPool
+from repro.uq.surrogate import SurrogateStore
+
+__all__ = ["run_stress"]
+
+
+def _f(theta: np.ndarray) -> np.ndarray:
+    """The model under stress: deterministic, cheap, 2 outputs."""
+    theta = np.asarray(theta, float).ravel()
+    return np.array([theta.sum(), float((theta**2).sum())])
+
+
+def _universe(n: int = 24, dim: int = 3) -> np.ndarray:
+    """Small overlapping theta set; rounded so byte-level cache keys from
+    independently-constructed copies collide (hits/coalescing happen)."""
+    rng = np.random.default_rng(12345)
+    return rng.standard_normal((n, dim)).round(3)
+
+
+class _CountingBackend:
+    """Batched callable recording per-theta computation counts."""
+
+    def __init__(self):
+        # plain lock on purpose: harness bookkeeping must not show up in
+        # the production lock-order graph
+        self._count_lock = threading.Lock()
+        self.computed: dict[bytes, int] = {}
+        self.calls = 0
+
+    def __call__(self, thetas):
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        with self._count_lock:
+            self.calls += 1
+            for t in thetas:
+                k = t.tobytes()
+                self.computed[k] = self.computed.get(k, 0) + 1
+        return np.stack([_f(t) for t in thetas])
+
+    def snapshot(self) -> dict[bytes, int]:
+        with self._count_lock:
+            return dict(self.computed)
+
+
+class _StressModel(Model):
+    """Per-point model for the ThreadedPool scenarios."""
+
+    def __init__(self, cost_s: float = 0.0):
+        super().__init__("stress")
+        self.cost_s = cost_s
+
+    def get_input_sizes(self, config=None):
+        return [3]
+
+    def get_output_sizes(self, config=None):
+        return [2]
+
+    def supports_evaluate(self):
+        return True
+
+    def __call__(self, parameters, config=None):
+        if self.cost_s:
+            time.sleep(self.cost_s)
+        return [list(_f(parameters[0]))]
+
+
+# ---------------------------------------------------------------------------
+# Scenario 1: exactly-once tap + telemetry consistency
+# ---------------------------------------------------------------------------
+
+
+def _stress_tap_exactly_once(
+    monitor: LockMonitor, n_threads: int, seed: int, rounds: int = 25
+) -> dict:
+    violations: list[str] = []
+    backend = _CountingBackend()
+    universe = _universe()
+    # LRU smaller than the universe: evictions force re-computation, so the
+    # exactly-once check covers the recompute path, not just first touch
+    fabric = EvaluationFabric(
+        CallableBackend(backend), max_batch=8, linger_s=1e-3, cache_size=16
+    )
+    # audit the telemetry dict + adaptively-tuned fields against held locks
+    fabric.stats = GuardedDict(monitor, "fabric.stats", fabric.stats)
+    store = SurrogateStore(target=lambda t, y: float(y[0]), config=None)
+    fabric.record_observer(store.observe)
+
+    observed: dict[bytes, int] = {}
+    obs_lock = threading.Lock()
+
+    @fabric.record_observer
+    def _count_tap(op, thetas, outs, config):
+        with obs_lock:
+            for t, y in zip(thetas, outs):
+                k = np.asarray(t, float).ravel().tobytes()
+                observed[k] = observed.get(k, 0) + 1
+                if not np.allclose(np.asarray(y).ravel(), _f(t)):
+                    violations.append(f"tap saw corrupted row for theta {t}")
+
+    requested = [0] * n_threads
+    errors: list[str] = []
+
+    def worker(k: int) -> None:
+        rng = random.Random(seed * 31 + k + 1)
+        try:
+            for _ in range(rounds):
+                if rng.random() < 0.5:
+                    t = universe[rng.randrange(len(universe))]
+                    out = fabric.submit(t).result(timeout=30)
+                    requested[k] += 1
+                    if not np.allclose(np.asarray(out).ravel(), _f(t)):
+                        errors.append(f"submit returned wrong row for {t}")
+                else:
+                    idx = [
+                        rng.randrange(len(universe))
+                        for _ in range(rng.randrange(1, 6))
+                    ]
+                    X = universe[idx]
+                    out = fabric.evaluate_batch(X)
+                    requested[k] += len(idx)
+                    want = np.stack([_f(t) for t in X])
+                    if not np.allclose(np.asarray(out), want):
+                        errors.append(f"evaluate_batch wrong rows for idx {idx}")
+        except Exception as e:  # noqa: BLE001 — surface, don't hang the run
+            errors.append(f"worker {k}: {e!r}")
+
+    with watch_fields(
+        monitor, EvaluationFabric, ("linger_s", "max_batch", "_wave_latency_ewma"),
+        tag="fabric",
+    ):
+        threads = [
+            threading.Thread(target=worker, args=(k,)) for k in range(n_threads)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        # snapshot only after shutdown joins the collector: it resolves a
+        # wave's futures BEFORE bumping waves/points, so an earlier read
+        # could miss the final wave's telemetry
+        fabric.shutdown()
+        stats = dict(fabric.stats)
+
+    violations.extend(errors)
+    computed = backend.snapshot()
+    n_computed = sum(computed.values())
+    n_requested = sum(requested)
+
+    if observed != computed:
+        only_c = {k: v for k, v in computed.items() if observed.get(k) != v}
+        only_o = {k: v for k, v in observed.items() if computed.get(k) != v}
+        violations.append(
+            "tap not exactly-once: "
+            f"{len(only_c)} theta(s) with observed != computed "
+            f"(computed side {sorted(only_c.values())}, "
+            f"observed side {sorted(only_o.values())})"
+        )
+    classified = stats["cache_hits"] + stats["cache_misses"] + stats["coalesced"]
+    if classified != n_requested:
+        violations.append(
+            f"telemetry drift: hits+misses+coalesced = {classified} "
+            f"!= {n_requested} rows requested"
+        )
+    if stats["points"] != n_computed:
+        violations.append(
+            f"telemetry drift: points = {stats['points']} "
+            f"!= {n_computed} rows computed"
+        )
+    tap_stats = store.stats()
+    if tap_stats["points_observed"] != n_computed:
+        violations.append(
+            f"surrogate tap drift: ingested {tap_stats['points_observed']} "
+            f"!= {n_computed} rows computed"
+        )
+    return {
+        "passed": not violations,
+        "violations": violations,
+        "rows_requested": n_requested,
+        "rows_computed": n_computed,
+        "rows_observed": sum(observed.values()),
+        "distinct_thetas": len(computed),
+        "cache_hits": stats["cache_hits"],
+        "cache_misses": stats["cache_misses"],
+        "coalesced": stats["coalesced"],
+        "waves": stats["waves"],
+        "gp_window": len(store.gp),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Scenario 2: router failover under concurrent waves
+# ---------------------------------------------------------------------------
+
+
+def _stress_router_steal(
+    monitor: LockMonitor, n_threads: int, seed: int, rounds: int = 6
+) -> dict:
+    del monitor  # instrumentation arrives via the active named_* factories
+    violations: list[str] = []
+    pools = [
+        ThreadedPool([_StressModel(0.001) for _ in range(2)]),
+        ThreadedPool([_StressModel(0.001) for _ in range(2)]),
+    ]
+    router = FabricRouter([ThreadedBackend(p) for p in pools], backoff_s=0.05)
+    fabric = EvaluationFabric(router, cache_size=0)
+    universe = _universe()
+    errors: list[str] = []
+    first_wave_done = threading.Event()
+
+    def worker(k: int) -> None:
+        rng = random.Random(seed * 97 + k + 1)
+        try:
+            for r in range(rounds):
+                idx = [rng.randrange(len(universe)) for _ in range(8)]
+                X = universe[idx]
+                out = fabric.evaluate_batch(X)
+                first_wave_done.set()
+                want = np.stack([_f(t) for t in X])
+                if not np.allclose(np.asarray(out), want):
+                    errors.append(f"worker {k} round {r}: wrong rows")
+        except Exception as e:  # noqa: BLE001
+            errors.append(f"worker {k}: {e!r}")
+
+    def killer() -> None:
+        # wait for live traffic, then yank a backend out from under it
+        first_wave_done.wait(timeout=30)
+        pools[1].shutdown()
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(n_threads)]
+    kt = threading.Thread(target=killer)
+    for t in threads:
+        t.start()
+    kt.start()
+    for t in threads:
+        t.join(timeout=60)
+    kt.join(timeout=60)
+    stats = router.stats()
+    fabric.shutdown()
+
+    violations.extend(errors)
+    if stats["steals"] < 1:
+        violations.append(
+            "router recorded no steal — the dead backend's shard was never "
+            "re-dispatched (kill may not have landed mid-traffic)"
+        )
+    return {
+        "passed": not violations,
+        "violations": violations,
+        "steals": stats["steals"],
+        "failures": [b["failures"] for b in stats["per_backend"]],
+        "points": [b["points"] for b in stats["per_backend"]],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Scenario 3: shutdown vs submit races
+# ---------------------------------------------------------------------------
+
+
+def _stress_pool_shutdown(
+    monitor: LockMonitor, n_threads: int, seed: int, rounds: int = 5
+) -> dict:
+    del monitor
+    violations: list[str] = []
+    theta = [1.0, 2.0, 3.0]
+    want = _f(theta)
+    stranded = 0
+    accepted_total = 0
+    refused_total = 0
+
+    for r in range(rounds):
+        rng = random.Random(seed * 131 + r)
+        pool = ThreadedPool([_StressModel(0.0) for _ in range(2)])
+        futs_per_thread: list[list] = [[] for _ in range(n_threads)]
+        saw_refusal = [False] * n_threads
+
+        def worker(k: int, pool=pool, futs=futs_per_thread, refused=saw_refusal):
+            for _ in range(200):
+                try:
+                    futs[k].append(pool.submit(theta))
+                except RuntimeError:
+                    refused[k] = True
+                    return
+
+        threads = [
+            threading.Thread(target=worker, args=(k,)) for k in range(n_threads)
+        ]
+        for t in threads:
+            t.start()
+        time.sleep(rng.uniform(0.0, 0.01))
+        pool.shutdown()
+        for t in threads:
+            t.join(timeout=30)
+
+        futs = [f for per in futs_per_thread for f in per]
+        accepted_total += len(futs)
+        refused_total += sum(saw_refusal)
+        done, not_done = futures_wait(futs, timeout=10)
+        if not_done:
+            stranded += len(not_done)
+            violations.append(
+                f"round {r}: {len(not_done)} accepted future(s) never "
+                "resolved — submit slipped past the shutdown drain"
+            )
+        for f in done:
+            exc = f.exception()
+            if exc is None and not np.allclose(np.asarray(f.result()), want):
+                violations.append(f"round {r}: resolved future has wrong row")
+                break
+        try:
+            pool.submit(theta)
+            violations.append(f"round {r}: submit after shutdown did not raise")
+        except RuntimeError:
+            pass
+    return {
+        "passed": not violations,
+        "violations": violations,
+        "rounds": rounds,
+        "futures_accepted": accepted_total,
+        "futures_stranded": stranded,
+        "threads_refused": refused_total,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def run_stress(
+    n_threads: int = 8,
+    seed: int = 0,
+    perturb: bool = True,
+    max_jitter_s: float = 2e-4,
+) -> dict:
+    """Run all three scenarios under one monitor; merge the lock-order
+    graph across them. Returns a JSON-able report with ``passed``."""
+    n_threads = max(2, int(n_threads))
+    monitor = LockMonitor(seed=seed, perturb=perturb, max_jitter_s=max_jitter_s)
+    scenarios: dict[str, dict] = {}
+    with monitored(monitor):
+        scenarios["tap_exactly_once"] = _stress_tap_exactly_once(
+            monitor, n_threads, seed
+        )
+        scenarios["router_steal"] = _stress_router_steal(monitor, n_threads, seed)
+        scenarios["pool_shutdown"] = _stress_pool_shutdown(monitor, n_threads, seed)
+    mon_report = monitor.report()
+    passed = (
+        all(s["passed"] for s in scenarios.values())
+        and not mon_report["lock_order_cycles"]
+        and not mon_report["unguarded_writes"]
+    )
+    return {
+        "schema": "repro-analysis-stress-v1",
+        "n_threads": n_threads,
+        "seed": seed,
+        "perturb": perturb,
+        "scenarios": scenarios,
+        "monitor": mon_report,
+        "passed": passed,
+    }

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.races import named_lock
 from repro.core.interface import Capabilities, Model, next_pow2, pad_to_bucket
 
 # grid: nx cells across the width (plies), ny along the length
@@ -396,6 +397,8 @@ class CompositeModel(Model):
     def __init__(self):
         super().__init__("forward")
         self.rom = CompositeROM.offline()
+        # waves arrive from fabric collector / server handler threads
+        self._lock = named_lock("composite.stats")
         self.stats = {"rom": 0, "full": 0}
 
     def get_input_sizes(self, config=None):
@@ -419,7 +422,8 @@ class CompositeModel(Model):
         mode = (config or {}).get("mode", "rom")
         if mode == "full":
             soft = self._softness(config)
-            self.stats["full"] += 1
+            with self._lock:
+                self.stats["full"] += 1
             if soft > 0.0:
                 e = _smooth_energy_batch(jnp.asarray(theta[None, :]), soft)[0]
                 return [[float(e)]]
@@ -427,7 +431,8 @@ class CompositeModel(Model):
             e, _ = solve_full(jnp.asarray(kx), jnp.asarray(ky))
             return [[float(e)]]
         e, _ = self.rom.online(theta)
-        self.stats["rom"] += 1
+        with self._lock:
+            self.stats["rom"] += 1
         return [[e]]
 
     def evaluate_batch(self, thetas, config=None) -> np.ndarray:
@@ -439,7 +444,8 @@ class CompositeModel(Model):
         mode = (config or {}).get("mode", "rom")
         thetas = np.atleast_2d(np.asarray(thetas, float))
         N = len(thetas)
-        self.stats[mode] += N
+        with self._lock:
+            self.stats[mode] += N
         energies = np.empty(N)
         soft = self._softness(config)
         for lo in range(0, N, self.BATCH_CHUNK):
@@ -487,7 +493,8 @@ class CompositeModel(Model):
             return self._fd_gradient_batch(thetas, senss, config)
         soft = self._softness(config) or DEFECT_SOFTNESS
         N = len(thetas)
-        self.stats["full"] += N
+        with self._lock:
+            self.stats["full"] += N
         grads = np.empty((N, 3))
         for lo in range(0, N, self.BATCH_CHUNK):
             part = thetas[lo: lo + self.BATCH_CHUNK]

@@ -18,7 +18,6 @@ at two buoys (x = 150 km, 250 km) -> 4 outputs.
 from __future__ import annotations
 
 import os
-import threading
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from functools import lru_cache, partial
@@ -27,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.races import named_lock
 from repro.core.interface import (
     Capabilities,
     Model,
@@ -274,7 +274,7 @@ def _jvp_batch(thetas: jax.Array, vecs: jax.Array, n_cells: int, smoothed: bool)
 _CHUNK_MAX = 64
 _CHUNK_MIN = 4
 _executor: ThreadPoolExecutor | None = None
-_executor_lock = threading.Lock()
+_executor_lock = named_lock("tsunami.executor")
 
 
 def _chunk_executor() -> ThreadPoolExecutor:
@@ -322,6 +322,8 @@ class TsunamiModel(Model):
 
     def __init__(self):
         super().__init__("forward")
+        # the fabric/server dispatch waves from several threads at once
+        self._lock = named_lock("tsunami.stats")
         self.stats = {0: 0, 1: 0}
         self._vgrad_cache: "OrderedDict" = OrderedDict()
 
@@ -341,7 +343,8 @@ class TsunamiModel(Model):
     def __call__(self, parameters, config=None):
         level = int((config or {}).get("level", 0))
         theta = np.asarray(parameters[0], float)
-        self.stats[level] += 1
+        with self._lock:
+            self.stats[level] += 1
         obs = observables(theta, self.N_CELLS[level], smoothed=(level == 0))
         return [list(map(float, obs))]
 
@@ -356,7 +359,8 @@ class TsunamiModel(Model):
         n_cells, smoothed = self.N_CELLS[level], (level == 0)
         thetas = np.atleast_2d(np.asarray(thetas, np.float32))
         N = len(thetas)
-        self.stats[level] += N
+        with self._lock:
+            self.stats[level] += N
         workers = max(os.cpu_count() or 1, 1)
         chunk = int(np.clip(next_pow2(-(-N // workers)), _CHUNK_MIN, _CHUNK_MAX))
 
@@ -395,7 +399,8 @@ class TsunamiModel(Model):
         thetas = np.atleast_2d(np.asarray(thetas, np.float32))
         senss = np.atleast_2d(np.asarray(senss, np.float32))
         N = len(thetas)
-        self.stats[level] += N
+        with self._lock:
+            self.stats[level] += N
         chunk, starts = self._grad_chunks(N)
 
         def grad_chunk(lo: int) -> np.ndarray:
@@ -424,7 +429,8 @@ class TsunamiModel(Model):
         thetas = np.atleast_2d(np.asarray(thetas, np.float32))
         vecs = np.atleast_2d(np.asarray(vecs, np.float32))
         N = len(thetas)
-        self.stats[level] += N
+        with self._lock:
+            self.stats[level] += N
         chunk, starts = self._grad_chunks(N)
 
         def jvp_chunk(lo: int) -> np.ndarray:
@@ -454,17 +460,18 @@ class TsunamiModel(Model):
         if not sens_fn_traceable(sens_fn, 4, jnp.float32):
             return super().value_and_gradient_batch(thetas, sens_fn, config)
         key = (level, sens_fn)
-        if key not in self._vgrad_cache:
-            @partial(jax.jit)
-            def fused(th):
-                y, vjp = jax.vjp(lambda t: _solve_batch(t, n_cells, smoothed), th)
-                senss = jax.vmap(sens_fn)(y)
-                return y, vjp(jnp.asarray(senss, y.dtype))[0]
-            self._vgrad_cache[key] = fused
-            while len(self._vgrad_cache) > self.MAX_FUSED_CACHE:
-                self._vgrad_cache.popitem(last=False)
-        self._vgrad_cache.move_to_end(key)
-        fused_fn = self._vgrad_cache[key]
+        with self._lock:
+            if key not in self._vgrad_cache:
+                @partial(jax.jit)
+                def fused(th):
+                    y, vjp = jax.vjp(lambda t: _solve_batch(t, n_cells, smoothed), th)
+                    senss = jax.vmap(sens_fn)(y)
+                    return y, vjp(jnp.asarray(senss, y.dtype))[0]
+                self._vgrad_cache[key] = fused
+                while len(self._vgrad_cache) > self.MAX_FUSED_CACHE:
+                    self._vgrad_cache.popitem(last=False)
+            self._vgrad_cache.move_to_end(key)
+            fused_fn = self._vgrad_cache[key]
         chunk, starts = self._grad_chunks(N)
 
         def fused_chunk(lo: int):
@@ -479,7 +486,8 @@ class TsunamiModel(Model):
             parts = list(_chunk_executor().map(fused_chunk, starts))
             ys = np.concatenate([p[0] for p in parts], axis=0)
             gs = np.concatenate([p[1] for p in parts], axis=0)
-        self.stats[level] += N
+        with self._lock:
+            self.stats[level] += N
         return ys, gs
 
 

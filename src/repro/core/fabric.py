@@ -61,6 +61,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.analysis.races import named_condition, named_lock
 from repro.core.interface import (
     Capabilities,
     JAXModel,
@@ -171,6 +172,7 @@ class SPMDBackend(FabricBackend):
         self.pool = pool
         self.n_instances = pool.n_instances
         self._caps = model_capabilities(pool.model)
+        self._lock = named_lock("spmd_backend.stats")
         self._op_stats: dict[str, int] = {}
 
     def capabilities(self) -> Capabilities:
@@ -188,7 +190,8 @@ class SPMDBackend(FabricBackend):
             return self.evaluate(thetas, config)
         if not _backend_op_ok(self, op):
             raise UnsupportedCapability(f"spmd backend: model advertises no {op!r}")
-        self._op_stats[op] = self._op_stats.get(op, 0) + 1
+        with self._lock:
+            self._op_stats[op] = self._op_stats.get(op, 0) + 1
         if op == "gradient":
             return self.pool.model.gradient_batch(thetas, extra, config)
         if op == "apply_jacobian":
@@ -200,8 +203,9 @@ class SPMDBackend(FabricBackend):
     def stats(self):
         s = dict(self.pool.stats)
         s["kind"] = self.name
-        if self._op_stats:
-            s["derivative_waves"] = dict(self._op_stats)
+        with self._lock:
+            if self._op_stats:
+                s["derivative_waves"] = dict(self._op_stats)
         return s
 
 
@@ -248,6 +252,9 @@ class ModelBackend(FabricBackend):
         self.model = model
         self.caps = model_capabilities(model)
         self.native = self.caps.evaluate_batch
+        # several fabrics (or a fabric's collector plus direct batch calls)
+        # can dispatch onto one backend concurrently; the counters are shared
+        self._lock = named_lock("model_backend.stats")
         self._stats = {
             "native_batches": 0,
             "native_points": 0,
@@ -275,12 +282,14 @@ class ModelBackend(FabricBackend):
             if getattr(self.model, "batch_bucket", False):
                 thetas, pad = pad_to_bucket(thetas, next_pow2(N))
             out = np.atleast_2d(np.asarray(self.model.evaluate_batch(thetas, config)))
-            self._stats["native_batches"] += 1
-            self._stats["native_points"] += N
-            self._stats["padded"] += pad
+            with self._lock:
+                self._stats["native_batches"] += 1
+                self._stats["native_points"] += N
+                self._stats["padded"] += pad
             return out[:N]
         if hasattr(self.model, "evaluate_batch"):
-            self._stats["fallback_points"] += N
+            with self._lock:
+                self._stats["fallback_points"] += N
             return np.atleast_2d(np.asarray(self.model.evaluate_batch(thetas, config)))
         # duck-typed models outside the Model hierarchy: un-flatten each
         # theta into input blocks and re-flatten all output blocks.
@@ -294,9 +303,12 @@ class ModelBackend(FabricBackend):
             DeprecationWarning,
             stacklevel=2,
         )
-        self._stats["fallback_points"] += N
+        with self._lock:
+            self._stats["fallback_points"] += N
         sizes = self.model.get_input_sizes(config)
         rows = []
+        # repro-lint: allow wave — deprecated per-point back-compat path for
+        # duck-typed models outside the Model hierarchy (warned above)
         for t in thetas:
             out = self.model(split_blocks(t, sizes), config)
             rows.append(np.concatenate([np.asarray(blk, float).ravel() for blk in out]))
@@ -309,7 +321,8 @@ class ModelBackend(FabricBackend):
             raise UnsupportedCapability(
                 f"model {getattr(self.model, 'name', '?')!r} advertises no {op!r}"
             )
-        self._op_stats[op] = self._op_stats.get(op, 0) + 1
+        with self._lock:
+            self._op_stats[op] = self._op_stats.get(op, 0) + 1
         if op == "gradient":
             return np.atleast_2d(np.asarray(
                 self.model.gradient_batch(thetas, extra, config), float
@@ -324,10 +337,13 @@ class ModelBackend(FabricBackend):
         raise UnsupportedCapability(op)
 
     def stats(self):
+        with self._lock:
+            snap = dict(self._stats)
+            op_snap = dict(self._op_stats)
         s = {"kind": self.name, "model": getattr(self.model, "name", "?"),
-             "native": self.native, **self._stats}
-        if self._op_stats:
-            s["derivative_waves"] = dict(self._op_stats)
+             "native": self.native, **snap}
+        if op_snap:
+            s["derivative_waves"] = op_snap
         rt = getattr(self.model, "round_trips", None)
         if rt is not None:
             s["round_trips"] = rt
@@ -475,7 +491,7 @@ class FabricRouter(FabricBackend):
         self.backoff_max_s = float(backoff_max_s)
         self.n_instances = sum(b.n_instances for b in self.backends)
         B = len(self.backends)
-        self._lock = threading.Lock()
+        self._lock = named_lock("router")
         self._ex = ThreadPoolExecutor(max_workers=max(4, 2 * B))
         self._ewma_s: list[float | None] = [None] * B  # per-POINT service time
         self._inflight = [0] * B
@@ -838,7 +854,7 @@ class EvaluationFabric:
         self.cache_size = int(cache_size)
         self._cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
         self._inflight: dict[tuple, Future] = {}
-        self._lock = threading.Condition()
+        self._lock = named_condition("fabric")
         self._pending: list[tuple[np.ndarray, dict | None, Future, tuple]] = []
         self._stop = False
         self._wave_latency_ewma: float | None = None
@@ -1301,11 +1317,15 @@ class EvaluationFabric:
         whenever submits saturate it."""
         if not self.adaptive:
             return
-        e = self._wave_latency_ewma
-        self._wave_latency_ewma = wave_latency if e is None else 0.7 * e + 0.3 * wave_latency
-        self.linger_s = float(np.clip(0.25 * self._wave_latency_ewma, 2e-4, 0.05))
-        if wave_size >= self.max_batch and self.max_batch < self._max_batch_cap:
-            self.max_batch = min(2 * self.max_batch, self._max_batch_cap)
+        # the collector calls this after releasing the fabric lock, but
+        # linger_s/max_batch are read by every submit and evaluate_batch —
+        # re-take the lock so the tuned values publish safely
+        with self._lock:
+            e = self._wave_latency_ewma
+            self._wave_latency_ewma = wave_latency if e is None else 0.7 * e + 0.3 * wave_latency
+            self.linger_s = float(np.clip(0.25 * self._wave_latency_ewma, 2e-4, 0.05))
+            if wave_size >= self.max_batch and self.max_batch < self._max_batch_cap:
+                self.max_batch = min(2 * self.max_batch, self._max_batch_cap)
 
     # -- telemetry / lifecycle ----------------------------------------------
     def telemetry(self) -> dict:

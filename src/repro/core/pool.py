@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.races import named_lock
 from repro.core.interface import JAXModel, Model, next_pow2, pad_to_bucket
 from repro.core.protocol import config_key
 
@@ -124,7 +125,7 @@ class _Request:
     attempts: int = 0
     # speculative re-dispatch puts the SAME request on two workers; the
     # attempts budget check must be atomic across them
-    lock: threading.Lock = field(default_factory=threading.Lock)
+    lock: threading.Lock = field(default_factory=lambda: named_lock("pool.request"))
 
     def consume_attempt(self, budget: int) -> bool:
         """Count one failed attempt; True while retries remain."""
@@ -159,6 +160,11 @@ class ThreadedPool:
         self.max_retries = max_retries
         self._q: queue.Queue = queue.Queue()
         self._stop = threading.Event()
+        # _submit_lock makes "check stop, then enqueue" atomic against the
+        # shutdown drain; _stats_lock covers the counters the N worker
+        # threads and the respawn timers all bump
+        self._submit_lock = named_lock("pool.submit")
+        self._stats_lock = named_lock("pool.stats")
         self._threads = [
             threading.Thread(target=self._worker, args=(i,), daemon=True)
             for i in range(len(self.instances))
@@ -183,43 +189,56 @@ class ThreadedPool:
                 out = model([req.theta], req.config)
                 if not req.future.done():
                     req.future.set_result(np.asarray(out[0]))
-                self.stats["evaluations"] += 1
+                with self._stats_lock:
+                    self.stats["evaluations"] += 1
             except Exception as e:  # noqa: BLE001 — instance failure
-                if self._stop.is_set() or not req.consume_attempt(self.max_retries):
-                    # no retry budget left — or the pool is stopping, where a
-                    # re-queued request could land after the shutdown drain
-                    # and strand its caller
+                if req.consume_attempt(self.max_retries) and self._enqueue(req):
+                    with self._stats_lock:
+                        self.stats["retries"] += 1
+                else:
+                    # no retry budget left — or the pool started draining, in
+                    # which case a re-queued request could land after the
+                    # shutdown drain and strand its caller (_enqueue refuses
+                    # atomically, so the request can only fail here, visibly)
                     if not req.future.done():
                         req.future.set_exception(e)
-                else:
-                    self.stats["retries"] += 1
-                    self._q.put(req)
             finally:
-                self.stats["busy_s"][idx] += time.monotonic() - t0
+                with self._stats_lock:
+                    self.stats["busy_s"][idx] += time.monotonic() - t0
                 self._q.task_done()
 
     # -- API ----------------------------------------------------------------
+    def _enqueue(self, req: _Request) -> bool:
+        """Atomically enqueue unless the pool is draining.
+
+        `shutdown()` sets the stop flag under the same lock, so once it
+        holds the lock no request can slip into the queue behind the
+        drain — the check-then-put window that used to strand futures
+        (submit/retry/respawn racing shutdown) is closed for every
+        producer path, which all funnel through here.
+        """
+        with self._submit_lock:
+            if self._stop.is_set():
+                return False
+            self._q.put(req)
+            return True
+
     def submit(self, theta, config: dict | None = None) -> Future:
-        if self._stop.is_set():
+        fut: Future = Future()
+        req = _Request(list(np.asarray(theta, float).ravel()), config, fut)
+        if not self._enqueue(req):
             # fail fast instead of queueing work no worker will ever take —
             # a dead pool behind a FabricRouter must RAISE so the router can
             # back it off and steal the shard onto a live backend
             raise RuntimeError("ThreadedPool is shut down")
-        fut: Future = Future()
-        req = _Request(list(np.asarray(theta, float).ravel()), config, fut)
-        self._q.put(req)
-        if self._stop.is_set() and not fut.done():
-            # shutdown raced the put: the drain may already have run, so no
-            # worker (and no drain) will ever resolve this future — fail it
-            fut.set_exception(RuntimeError("ThreadedPool is shut down"))
         if self.deadline_s is not None:
             def respawn():
-                if not fut.done():
-                    self.stats["respawns"] += 1
+                if not fut.done() and self._enqueue(req):
                     # re-queue the SAME request object: the duplicate shares
                     # the attempts counter, so speculation does not silently
                     # double the retry budget
-                    self._q.put(req)
+                    with self._stats_lock:
+                        self.stats["respawns"] += 1
             timer = threading.Timer(self.deadline_s, respawn)
             timer.daemon = True
             timer.start()
@@ -266,7 +285,11 @@ class ThreadedPool:
     __call__ = evaluate
 
     def shutdown(self):
-        self._stop.set()
+        with self._submit_lock:
+            # taking the submit lock before raising the flag means every
+            # in-flight _enqueue has either finished its put (the drain
+            # below will see it) or will observe the flag and refuse
+            self._stop.set()
         for t in self._threads:
             t.join(timeout=1.0)
         # drain the queue: requests stranded behind the stop flag would hang

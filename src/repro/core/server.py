@@ -20,6 +20,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 import numpy as np
 
+from repro.analysis.races import named_lock
 from repro.core.interface import Model, model_capabilities
 from repro.core.protocol import (
     PROTOCOL_VERSION,
@@ -31,6 +32,12 @@ from repro.core.protocol import (
 
 
 def _make_handler(models: dict[str, Model]):
+    # ThreadingHTTPServer runs one handler thread per connection; the
+    # request counters below are the server's shared state and follow the
+    # same lock discipline the fabric telemetry does
+    stats = {"requests": 0, "errors": 0}
+    stats_lock = named_lock("server.stats")
+
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, *args):  # silence
             pass
@@ -49,6 +56,8 @@ def _make_handler(models: dict[str, Model]):
             elif self.path.rstrip("/") == "/Health":
                 # liveness probe for multi-server registration: routers ping
                 # this before enrolling a server in the backend cluster
+                with stats_lock:
+                    snap = dict(stats)
                 caps = {name: model_capabilities(m) for name, m in models.items()}
                 self._send(
                     {
@@ -58,12 +67,15 @@ def _make_handler(models: dict[str, Model]):
                         # legacy key (pre-capability clients read it)
                         "batch": {n: c.evaluate_batch for n, c in caps.items()},
                         "capabilities": {n: c.to_json() for n, c in caps.items()},
+                        "stats": snap,
                     }
                 )
             else:
                 self._send(error_body("NotFound", self.path), 404)
 
         def do_POST(self):  # noqa: N802
+            with stats_lock:
+                stats["requests"] += 1
             n = int(self.headers.get("Content-Length", 0))
             try:
                 body = json.loads(self.rfile.read(n) or b"{}")
@@ -171,6 +183,8 @@ def _make_handler(models: dict[str, Model]):
                     return self._send({"output": list(map(float, out))})
                 return self._send(error_body("NotFound", self.path), 404)
             except Exception as e:  # noqa: BLE001
+                with stats_lock:
+                    stats["errors"] += 1
                 return self._send(error_body("ModelError", repr(e)), 400)
 
     return Handler

@@ -18,12 +18,13 @@ hyperparameter search re-runs only on a predictive-error STALENESS trigger.
 """
 from __future__ import annotations
 
-import threading
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.analysis.races import named_rlock
 
 #: predictive-variance floor relative to the kernel amplitude — the Schur
 #: complement amp - v^T v is computed by subtraction, so near-degenerate
@@ -222,7 +223,7 @@ class OnlineGP:
         self.n_seen = 0
         self.n_hyper_fits = 0
         self.n_chol_refits = 0
-        self._lock = threading.RLock()
+        self._lock = named_rlock("online_gp")
 
     def __len__(self) -> int:
         return 0 if self._y is None else len(self._y)

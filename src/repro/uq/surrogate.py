@@ -26,11 +26,11 @@ buys the most. This module provides the two pieces that turn the
 """
 from __future__ import annotations
 
-import threading
 from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.analysis.races import named_lock
 from repro.core.protocol import config_key
 from repro.uq.gp import OnlineGP
 
@@ -68,7 +68,7 @@ class SurrogateStore:
         self._cfg_key = None if self._any else config_key(config)
         self.n_waves = 0
         self.n_points = 0
-        self._lock = threading.Lock()
+        self._lock = named_lock("surrogate_store")
 
     def observe(self, op: str, thetas, outputs, config) -> None:
         """`record_observer` callback: one call per completed wave."""

@@ -1,0 +1,235 @@
+"""Invariant-linter tests: each rule detects its injected violation and
+stays silent on lookalikes; waivers, baseline round-trip, and the
+repo-clean gate itself."""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import run_lint
+from repro.analysis.lint import (
+    REPO_ROOT,
+    apply_baseline,
+    load_baseline,
+    write_baseline,
+)
+from repro.analysis.selftest import FIXTURES, run_selftest
+
+
+def _lint_tree(tmp_path: Path, tree: dict[str, str], rules=None):
+    for rel, src in tree.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_lint([tmp_path], rules=rules, root=tmp_path)
+
+
+# -- per-rule fixtures: detection AND non-detection ---------------------------
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_detects_injected_violation(tmp_path, rule):
+    spec = FIXTURES[rule]
+    findings = [
+        f for f in _lint_tree(tmp_path / "bad", spec["bad"], rules=[rule])
+        if f.rule == rule
+    ]
+    assert len(findings) >= spec["expect_min"], [str(f) for f in findings]
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_rule_silent_on_lookalikes(tmp_path, rule):
+    spec = FIXTURES[rule]
+    findings = [
+        f for f in _lint_tree(tmp_path / "good", spec["good"], rules=[rule])
+        if f.rule == rule
+    ]
+    assert not findings, [str(f) for f in findings]
+
+
+def test_selftest_passes():
+    report = run_selftest()
+    assert report["passed"], json.dumps(report, indent=2)
+
+
+# -- harder false-positive lookalikes ----------------------------------------
+
+
+def test_exactness_allows_seeded_rngs(tmp_path):
+    findings = _lint_tree(tmp_path, {
+        "src/repro/uq/seeded.py": '''
+            import random
+
+            import numpy as np
+
+
+            def draws(seed):
+                rng = np.random.default_rng(np.random.SeedSequence(seed))
+                jitter = random.Random(seed * 7919 + 1)
+                return rng.standard_normal(4), jitter.random()
+            ''',
+    }, rules=["exactness"])
+    assert not findings, [str(f) for f in findings]
+
+
+def test_exactness_flags_unseeded_in_scope_only(tmp_path):
+    tree = {
+        # in scope: flagged
+        "src/repro/uq/bad.py": '''
+            import numpy as np
+
+
+            def noise(n):
+                return np.random.normal(size=n)
+            ''',
+        # out of scope (core/): same code, not flagged
+        "src/repro/core/ok.py": '''
+            import numpy as np
+
+
+            def noise(n):
+                return np.random.normal(size=n)
+            ''',
+    }
+    findings = _lint_tree(tmp_path, tree, rules=["exactness"])
+    assert [f.path for f in findings] == ["src/repro/uq/bad.py"]
+
+
+def test_wave_rule_ignores_base_class_fallback_module(tmp_path):
+    # the per-point loop in the Model fallback lives OUTSIDE the hot
+    # modules — the rule must not flag the fallback's own definition
+    findings = _lint_tree(tmp_path, {
+        "src/repro/core/interface.py": '''
+            class Model:
+                def evaluate_batch(self, thetas, config=None):
+                    return [self.model(t, config) for t in thetas]
+            ''',
+    }, rules=["wave"])
+    assert not findings
+
+
+def test_wave_rule_ignores_prior_loops_in_hot_modules(tmp_path):
+    findings = _lint_tree(tmp_path, {
+        "src/repro/uq/mlda.py": '''
+            def prior_scan(logprior, thetas):
+                return [float(logprior(t)) for t in thetas]
+            ''',
+    }, rules=["wave"])
+    assert not findings
+
+
+def test_locks_rule_honors_caller_holds_the_lock(tmp_path):
+    findings = _lint_tree(tmp_path, {
+        "src/repro/core/telem.py": '''
+            import threading
+
+
+            class T:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self.stats = {"n": 0}
+
+                def bump(self):
+                    with self._lock:
+                        self._bump()
+
+                def _bump(self):  # caller holds the lock
+                    self.stats["n"] += 1
+            ''',
+    }, rules=["locks"])
+    assert not findings
+
+
+# -- waivers ------------------------------------------------------------------
+
+
+def test_waiver_suppresses_named_rule_on_next_line(tmp_path):
+    base = '''
+        def shattered(model, thetas):
+            {waiver}
+            outs = [model(t) for t in thetas]
+            return outs
+        '''
+    waived = _lint_tree(tmp_path / "a", {
+        "src/repro/uq/mcmc.py": base.format(
+            waiver="# repro-lint: allow wave -- measured per-point baseline"
+        ),
+    }, rules=["wave"])
+    assert not waived
+    unwaived = _lint_tree(tmp_path / "b", {
+        "src/repro/uq/mcmc.py": base.format(waiver="# a plain comment"),
+    }, rules=["wave"])
+    assert len(unwaived) == 1
+    # a waiver for a DIFFERENT rule must not suppress this one
+    wrong = _lint_tree(tmp_path / "c", {
+        "src/repro/uq/mcmc.py": base.format(
+            waiver="# repro-lint: allow exactness"
+        ),
+    }, rules=["wave"])
+    assert len(wrong) == 1
+
+
+# -- baseline round-trip ------------------------------------------------------
+
+
+def test_baseline_round_trip_grandfathers_old_findings(tmp_path):
+    tree = {
+        "src/repro/uq/old.py": '''
+            import numpy as np
+
+
+            def legacy(n):
+                return np.random.normal(size=n)
+            ''',
+    }
+    findings = _lint_tree(tmp_path, tree, rules=["exactness"])
+    assert findings
+    bl_path = tmp_path / "baseline.json"
+    write_baseline(bl_path, findings)
+    baseline = load_baseline(bl_path)
+    new, old = apply_baseline(findings, baseline)
+    assert not new and len(old) == len(findings)
+    # a NEW violation in the same tree is not grandfathered
+    (tmp_path / "src/repro/uq/new.py").write_text(
+        "import numpy as np\n\n\ndef fresh(n):\n"
+        "    return np.random.rand(n)\n"
+    )
+    findings2 = run_lint([tmp_path], rules=["exactness"], root=tmp_path)
+    new2, old2 = apply_baseline(findings2, baseline)
+    assert [f.path for f in new2] == ["src/repro/uq/new.py"]
+    assert len(old2) == len(old)
+
+
+def test_finding_keys_are_line_number_free(tmp_path):
+    a = _lint_tree(tmp_path / "a", {
+        "src/repro/uq/x.py": '''
+            import numpy as np
+
+
+            def f():
+                return np.random.normal()
+            ''',
+    }, rules=["exactness"])
+    b = _lint_tree(tmp_path / "b", {
+        "src/repro/uq/x.py": '''
+            import numpy as np
+
+            PADDING = 1
+
+
+            def f():
+                return np.random.normal()
+            ''',
+    }, rules=["exactness"])
+    assert {f.key() for f in a} == {f.key() for f in b}
+    assert a[0].line != b[0].line
+
+
+# -- the gate on this repository ----------------------------------------------
+
+
+def test_repo_lints_clean_without_baseline():
+    """src/repro itself must satisfy all five invariants (empty baseline)."""
+    findings = run_lint([REPO_ROOT / "src" / "repro"])
+    assert not findings, "\n".join(str(f) for f in findings)
