@@ -83,6 +83,15 @@ def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
             rate = em["ensemble_evals_per_sec"]
         if isinstance(out, dict) and "router" in out:
             derived += _fmt_imbalance(out["router"])
+    elif name.startswith("elastic_fleet"):
+        ch, ck = out["chaos"], out["checkpoint"]
+        derived = (
+            f"chaos_throughput_ratio={ch['throughput_ratio']:.2f};"
+            f"spec_dispatches={ch['spec_dispatches']};"
+            f"resume_exact={ck['resume_exact']};"
+            f"wave_savings={ck['wave_savings']:.2f}"
+        )
+        rate = ch["evals_per_sec"]
     elif name == "roofline":
         fracs = [c["roofline_fraction"] for c in out]
         derived = f"cells={len(out)};median_frac={sorted(fracs)[len(fracs)//2]:.3f}"
@@ -103,6 +112,7 @@ def main() -> None:
 
     from benchmarks import (
         batch_eval,
+        elastic_fleet,
         grad_mcmc,
         mlda_tsunami,
         qmc_defects,
@@ -120,6 +130,7 @@ def main() -> None:
         ("mlda_tsunami_sec4.3", mlda_tsunami.main),
         ("grad_mcmc_mala", grad_mcmc.main),
         ("surrogate_da_sec4.3", surrogate_da.main),
+        ("elastic_fleet", elastic_fleet.main),
         ("roofline", roofline.main),
     ]
     for name, fn in benches:

@@ -1,6 +1,6 @@
 """Schedule-perturbing stress harness for the fabric stack.
 
-Three scenarios drive the known-concurrent surfaces under an activated
+Four scenarios drive the known-concurrent surfaces under an activated
 `LockMonitor` (every production lock built through the `named_*`
 factories is instrumented, acquisitions are jittered to shake out
 interleavings), then the monitor's global view is checked:
@@ -24,6 +24,15 @@ interleavings), then the monitor's global view is checked:
   a randomly-timed `ThreadedPool.shutdown()`. Every accepted future must
   resolve (result or error — never hang), and submits after shutdown
   must raise.
+
+* **elastic_resize** — a resize storm: >= 8 caller threads hammer waves
+  through a speculating `FabricRouter` (one deliberately slow member, so
+  cross-backend duplication fires) while a resizer thread concurrently
+  enrolls, drains, re-instates and retires backends. Every wave must
+  return correct rows (zero lost waves), the training tap must fire
+  EXACTLY once per delivered row even when speculative duplicates race
+  (the `tap_exactly_once` invariant under duplication), and the lifecycle
+  churn + speculation must actually have happened.
 
 The harness FAILS (report["passed"] is False) on any scenario violation,
 any lock-order cycle, or any unguarded shared-field write. CLI:
@@ -370,6 +379,154 @@ def _stress_pool_shutdown(
 
 
 # ---------------------------------------------------------------------------
+# Scenario 4: elastic resize storm + speculation exactly-once
+# ---------------------------------------------------------------------------
+
+
+def _stress_elastic_resize(
+    monitor: LockMonitor, n_threads: int, seed: int, rounds: int = 6
+) -> dict:
+    del monitor  # instrumentation arrives via the active named_* factories
+    violations: list[str] = []
+    universe = _universe()
+
+    slow_calls = [0]
+    slow_lock = threading.Lock()
+
+    def slow_backend(thetas):
+        # variably slow: a steady baseline establishes the EWMA, then every
+        # fourth call stalls well past spec_factor * EWMA so speculative
+        # duplication actually fires against this member's own history
+        with slow_lock:
+            slow_calls[0] += 1
+            k = slow_calls[0]
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        time.sleep(0.004 * len(thetas) + (0.06 if k % 4 == 3 else 0.0))
+        return np.stack([_f(t) for t in thetas])
+
+    def fast_backend(thetas):
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        return np.stack([_f(t) for t in thetas])
+
+    router = FabricRouter(
+        [CallableBackend(fast_backend), CallableBackend(slow_backend),
+         CallableBackend(fast_backend)],
+        spec_factor=1.5, spec_min_s=0.005, backoff_s=0.05,
+    )
+    # cache off: the tap then fires for EVERY delivered row, so delivered
+    # row accounting is exact (observed == fabric points == rows requested)
+    fabric = EvaluationFabric(router, cache_size=0)
+
+    observed = [0]
+    obs_lock = threading.Lock()
+
+    @fabric.record_observer
+    def _tap(op, thetas, outs, config):
+        with obs_lock:
+            observed[0] += len(np.atleast_2d(thetas))
+            for t, y in zip(np.atleast_2d(thetas), np.atleast_2d(outs)):
+                if not np.allclose(np.asarray(y).ravel(), _f(t)):
+                    violations.append("tap saw corrupted row under resize")
+
+    errors: list[str] = []
+    requested = [0] * n_threads
+    stop_resize = threading.Event()
+
+    def worker(k: int) -> None:
+        rng = random.Random(seed * 193 + k + 1)
+        try:
+            for _ in range(rounds):
+                idx = [rng.randrange(len(universe)) for _ in range(8)]
+                X = universe[idx]
+                out = fabric.evaluate_batch(X)
+                requested[k] += len(idx)
+                want = np.stack([_f(t) for t in X])
+                if not np.allclose(np.asarray(out), want):
+                    errors.append(f"worker {k}: wrong rows under resize")
+        except Exception as e:  # noqa: BLE001 — a lost wave is the violation
+            errors.append(f"worker {k}: {e!r}")
+
+    resize_counts = {"added": 0, "drained": 0, "reinstated": 0, "removed": 0}
+
+    def resizer() -> None:
+        # storm the lifecycle surface while traffic is in flight; backend 0
+        # is never touched, so at least one fast member always serves
+        rng = random.Random(seed * 389 + 7)
+        grown: list[int] = []
+        while not stop_resize.is_set():
+            action = rng.randrange(4)
+            if action == 0:
+                grown.append(router.add_backend(CallableBackend(fast_backend)))
+                resize_counts["added"] += 1
+            elif action == 1:
+                router.drain_backend(rng.choice([1, 2]))
+                resize_counts["drained"] += 1
+            elif action == 2:
+                router.reinstate_backend(rng.choice([1, 2]))
+                resize_counts["reinstated"] += 1
+            elif grown:
+                router.remove_backend(grown.pop(), timeout_s=0.2)
+                resize_counts["removed"] += 1
+            time.sleep(rng.uniform(0.0, 0.004))
+        # leave the fleet fully live so the final waves see every member
+        for i in range(len(router.backends)):
+            router.reinstate_backend(i)
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in range(n_threads)]
+    rt = threading.Thread(target=resizer)
+    for t in threads:
+        t.start()
+    rt.start()
+    for t in threads:
+        t.join(timeout=60)
+    stop_resize.set()
+    rt.join(timeout=30)
+    stats = router.stats()
+    fstats = dict(fabric.stats)
+    fabric.shutdown()
+
+    violations.extend(errors)
+    n_requested = sum(requested)
+    # delivery-layer exactly-once: every row the fabric computed reached the
+    # tap exactly once, even when speculative duplicates raced below it
+    # (losing attempts are dropped under the cache/tap layer)
+    if observed[0] != fstats["points"]:
+        violations.append(
+            f"tap not exactly-once under duplication: observed {observed[0]} "
+            f"rows != {fstats['points']} computed"
+        )
+    accounted = fstats["cache_hits"] + fstats["cache_misses"] + fstats["coalesced"]
+    if accounted != n_requested:
+        violations.append(
+            f"telemetry drift under resize: hits+misses+coalesced "
+            f"{accounted} != {n_requested} rows requested"
+        )
+    if stats["spec_dispatches"] < 1:
+        violations.append(
+            "speculation never fired — the straggler stalls were not "
+            "duplicated cross-backend"
+        )
+    churn = resize_counts["added"] + resize_counts["drained"]
+    if churn < 2:
+        violations.append(
+            f"resize storm too quiet (churn={churn}) — scenario did not "
+            "exercise the lifecycle under load"
+        )
+    return {
+        "passed": not violations,
+        "violations": violations,
+        "rows_requested": n_requested,
+        "rows_computed": fstats["points"],
+        "rows_observed": observed[0],
+        "fleet_size_final": stats["n_backends"],
+        "spec_dispatches": stats["spec_dispatches"],
+        "spec_wins": stats["spec_wins"],
+        "steals": stats["steals"],
+        **resize_counts,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Driver
 # ---------------------------------------------------------------------------
 
@@ -380,7 +537,7 @@ def run_stress(
     perturb: bool = True,
     max_jitter_s: float = 2e-4,
 ) -> dict:
-    """Run all three scenarios under one monitor; merge the lock-order
+    """Run all four scenarios under one monitor; merge the lock-order
     graph across them. Returns a JSON-able report with ``passed``."""
     n_threads = max(2, int(n_threads))
     monitor = LockMonitor(seed=seed, perturb=perturb, max_jitter_s=max_jitter_s)
@@ -391,6 +548,7 @@ def run_stress(
         )
         scenarios["router_steal"] = _stress_router_steal(monitor, n_threads, seed)
         scenarios["pool_shutdown"] = _stress_pool_shutdown(monitor, n_threads, seed)
+        scenarios["elastic_resize"] = _stress_elastic_resize(monitor, n_threads, seed)
     mon_report = monitor.report()
     passed = (
         all(s["passed"] for s in scenarios.values())

@@ -11,5 +11,10 @@ from repro.core.fabric import (  # noqa: F401
     ThreadedBackend,
     as_backend,
 )
+from repro.core.fleet import (  # noqa: F401
+    CampaignCheckpoint,
+    FaultInjector,
+    FleetManager,
+)
 from repro.core.scheduler import BatchingExecutor  # noqa: F401
 from repro.core.hierarchy import MultilevelModel  # noqa: F401

@@ -78,7 +78,9 @@ def register_servers(
     *,
     timeout: float = 600.0,
     require_all: bool = False,
-) -> list:
+    return_dead: bool = False,
+    allow_empty: bool = False,
+):
     """Probe each server's `/Health` and enroll the live ones as independent
     fabric backends — ONE `HTTPBackend` per server, so a `FabricRouter` (or
     `EvaluationFabric(register_servers(urls))`) load-balances across the
@@ -86,8 +88,15 @@ def register_servers(
     failover, instead of the static contiguous split a single multi-client
     `HTTPBackend` does.
 
-    Dead servers are skipped (raise with `require_all=True`); registering
-    zero live servers always raises."""
+    Dead servers are skipped (raise with `require_all=True`). They used to
+    be dropped PERMANENTLY — the caller never learned which URLs failed the
+    probe, so a server that was merely booting slowly could never be
+    enrolled later. `return_dead=True` returns `(backends, dead_urls)` so a
+    re-probe loop (`core.fleet.FleetManager.watch_servers`) can retry the
+    dead list and enroll late arrivals via `fabric.add_backend`.
+
+    Registering zero live servers raises unless `allow_empty=True` (an
+    elastic fleet may legitimately start empty and scale up)."""
     from repro.core.fabric import HTTPBackend
 
     backends, dead = [], []
@@ -105,8 +114,10 @@ def register_servers(
         backends.append(HTTPBackend([HTTPModel(url, name, timeout=timeout)]))
     if dead and require_all:
         raise RuntimeError(f"unhealthy servers: {dead}")
-    if not backends:
+    if not backends and not allow_empty:
         raise RuntimeError(f"no healthy servers among {list(urls)}")
+    if return_dead:
+        return backends, dead
     return backends
 
 

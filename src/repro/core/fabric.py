@@ -56,7 +56,8 @@ import threading
 import time
 import warnings
 from collections import OrderedDict
-from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
 from typing import Callable, Sequence
 
 import numpy as np
@@ -457,6 +458,23 @@ class FabricRouter(FabricBackend):
       * **config bindings** — `bind(config, [i, j])` restricts waves carrying
         that config to a backend subset (MLDA binds `{"level": l}` to the
         sub-cluster sized for level l);
+      * **dynamic lifecycle** — `add_backend` enrolls a new backend mid-run
+        (router weight/EWMA/backoff state is extended under the router
+        lock; the newcomer starts with the optimistic unknown-EWMA probe),
+        `drain_backend` stops planning new waves onto a member while its
+        in-flight shards complete, `remove_backend` drains and retires it,
+        and `reinstate_backend` returns a drained/retired member to service
+        with its failure state cleared — the `core.fleet.FleetManager`
+        drives these from telemetry to grow/shrink the fleet under load and
+        re-enroll backends that died and came back (health probation);
+      * **speculative re-dispatch** — with `spec_factor` set, a shard still
+        running past `spec_factor x` its EWMA-predicted wall time is
+        DUPLICATED onto the fastest idle eligible backend and the first
+        result wins (`ThreadedPool`'s per-request straggler respawn, lifted
+        across backends). Duplication happens strictly below the fabric
+        cache/tap layer: the wave still returns exactly one row per theta
+        and training observers fire exactly once per computed row, so the
+        `tap_exactly_once` invariant holds under speculation;
       * **telemetry** — per-backend share / points / failures / EWMA, steal
         count, per-capability wave counts (`op_waves`), and the wave
         imbalance factor (actual wave wall time over the ideal
@@ -473,6 +491,13 @@ class FabricRouter(FabricBackend):
 
     name = "router"
 
+    #: cap on the failure-backoff exponent: the backoff ceiling
+    #: (`backoff_max_s`) is reached long before this, and an unbounded
+    #: `2 ** streak` overflows float once a dead backend has failed a few
+    #: hundred steals in a row — which used to fail the SHARD instead of
+    #: stealing it
+    BACKOFF_EXP_CAP = 16
+
     def __init__(
         self,
         backends: Sequence,
@@ -480,6 +505,8 @@ class FabricRouter(FabricBackend):
         policy: str = "latency",
         backoff_s: float = 0.25,
         backoff_max_s: float = 30.0,
+        spec_factor: float | None = None,
+        spec_min_s: float = 0.05,
     ):
         self.backends = [as_backend(b) for b in backends]
         if not self.backends:
@@ -489,23 +516,41 @@ class FabricRouter(FabricBackend):
         self.policy = policy
         self.backoff_s = float(backoff_s)
         self.backoff_max_s = float(backoff_max_s)
+        #: speculative re-dispatch: a shard running past
+        #: `spec_factor * ewma * n_points` (never less than `spec_min_s`)
+        #: is duplicated onto the fastest idle eligible backend,
+        #: first-result-wins; None disables speculation
+        self.spec_factor = None if spec_factor is None else float(spec_factor)
+        self.spec_min_s = float(spec_min_s)
         self.n_instances = sum(b.n_instances for b in self.backends)
         B = len(self.backends)
         self._lock = named_lock("router")
-        self._ex = ThreadPoolExecutor(max_workers=max(4, 2 * B))
+        self._ex = ThreadPoolExecutor(max_workers=max(8, 4 * B))
         self._ewma_s: list[float | None] = [None] * B  # per-POINT service time
         self._inflight = [0] * B
         self._fail_streak = [0] * B
         self._backoff_until = [0.0] * B
+        #: per-backend lifecycle: "live" -> planned onto; "draining" ->
+        #: in-flight shards finish, no new planning; "retired" -> out of
+        #: service (indices stay stable so bindings/telemetry never shift)
+        self._admin: list[str] = ["live"] * B
         self._bindings: dict[tuple, tuple[int, ...]] = {}
         self._rr = 0  # round-robin cursor
         self.router_stats = self._fresh_stats()
 
+    def _in_service(self) -> list[int]:  # caller holds the lock
+        return [i for i, a in enumerate(self._admin) if a == "live"]
+
     def capabilities(self) -> Capabilities:
-        """UNION over the cluster — an op is advertised when at least one
-        member can serve it (planning restricts each wave to that subset)."""
-        caps = self.backends[0].capabilities()
-        for b in self.backends[1:]:
+        """UNION over the in-service cluster — an op is advertised when at
+        least one live member can serve it (planning restricts each wave to
+        that subset). Falls back to the full member list when everything is
+        drained, so negotiation stays possible while a fleet resizes."""
+        with self._lock:
+            idx = self._in_service() or list(range(len(self.backends)))
+            members = [self.backends[i] for i in idx]
+        caps = members[0].capabilities()
+        for b in members[1:]:
             caps = caps.union(b.capabilities())
         return caps
 
@@ -521,10 +566,140 @@ class FabricRouter(FabricBackend):
             "waves_per_backend": [0] * B,
             "failures": [0] * B,
             "steals": 0,
+            # speculative re-dispatch economics: duplicates launched, and
+            # how many beat their primary to the finish line
+            "spec_dispatches": 0,
+            "spec_wins": 0,
             "op_waves": {},
             "last_imbalance": None,
             "imbalance_ewma": None,
         }
+
+    # -- dynamic backend lifecycle -------------------------------------------
+    def add_backend(self, obj) -> int:
+        """Enroll a new backend mid-run and return its (stable) index.
+
+        All router state — EWMA, inflight, failure/backoff, admin, traffic
+        counters — is extended under the router lock, so waves planned
+        concurrently see either the old fleet or the complete new one. The
+        newcomer starts with an unknown EWMA, which `_throughput` treats
+        optimistically (fastest known service time) so it is probed by the
+        very next wave rather than starved."""
+        backend = as_backend(obj)
+        with self._lock:
+            self.backends.append(backend)
+            self._ewma_s.append(None)
+            self._inflight.append(0)
+            self._fail_streak.append(0)
+            self._backoff_until.append(0.0)
+            self._admin.append("live")
+            self.router_stats["points"].append(0)
+            self.router_stats["waves_per_backend"].append(0)
+            self.router_stats["failures"].append(0)
+            self.n_instances = sum(b.n_instances for b in self.backends)
+            return len(self.backends) - 1
+
+    def _check_idx(self, i: int) -> int:
+        i = int(i)
+        if not 0 <= i < len(self.backends):
+            raise IndexError(f"no backend {i} (fleet size {len(self.backends)})")
+        return i
+
+    def drain_backend(self, i: int) -> None:
+        """Stop planning (and stealing) new waves onto backend `i`; shards
+        already in flight complete normally. Reversible via
+        `reinstate_backend`."""
+        i = self._check_idx(i)
+        with self._lock:
+            if self._admin[i] == "live":
+                self._admin[i] = "draining"
+
+    def remove_backend(
+        self, i: int, *, close: bool = False, timeout_s: float = 5.0
+    ) -> None:
+        """Retire backend `i`: drain it, wait (up to `timeout_s`) for its
+        in-flight shards, and mark it out of service. Indices never shift —
+        bindings and telemetry stay valid — and a retired member can rejoin
+        later through `reinstate_backend` (health probation). `close=True`
+        additionally shuts the backend object down (irreversible for pools)."""
+        i = self._check_idx(i)
+        with self._lock:
+            self._admin[i] = "draining"
+        deadline = time.monotonic() + float(timeout_s)
+        while time.monotonic() < deadline:
+            with self._lock:
+                if self._inflight[i] == 0:
+                    break
+            time.sleep(0.005)
+        with self._lock:
+            self._admin[i] = "retired"
+            self.n_instances = sum(
+                b.n_instances for j, b in enumerate(self.backends)
+                if self._admin[j] == "live"
+            ) or self.backends[0].n_instances
+        if close:
+            self.backends[i].close()
+
+    def reinstate_backend(self, i: int) -> None:
+        """Return a drained/retired backend to service with a clean slate:
+        failure streak and backoff cleared, EWMA reset to unknown (it will
+        be re-probed optimistically — a machine that came back may not
+        perform like it used to)."""
+        i = self._check_idx(i)
+        with self._lock:
+            self._admin[i] = "live"
+            self._fail_streak[i] = 0
+            self._backoff_until[i] = 0.0
+            self._ewma_s[i] = None
+            self.n_instances = sum(
+                b.n_instances for j, b in enumerate(self.backends)
+                if self._admin[j] == "live"
+            )
+
+    def admin_states(self) -> list[str]:
+        """Per-backend lifecycle states (index-aligned with `backends`)."""
+        with self._lock:
+            return list(self._admin)
+
+    def load(self) -> dict:
+        """Live load snapshot for scaling policies (`core.fleet`): per-
+        backend in-flight points, EWMA service times, failure streaks and
+        admin states, all index-aligned and read under one lock hold."""
+        with self._lock:
+            return {
+                "inflight": list(self._inflight),
+                "ewma_point_s": list(self._ewma_s),
+                "fail_streak": list(self._fail_streak),
+                "backoff_remaining_s": [
+                    max(0.0, t - time.monotonic()) for t in self._backoff_until
+                ],
+                "admin": list(self._admin),
+            }
+
+    # -- checkpointable state ------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-able learned state (EWMA + lifecycle) for campaign
+        checkpoints — traffic counters are not part of it (a resumed
+        campaign starts fresh telemetry)."""
+        with self._lock:
+            return {
+                "ewma_point_s": list(self._ewma_s),
+                "admin": list(self._admin),
+            }
+
+    def load_state(self, doc: dict) -> None:
+        """Re-apply a `state_dict` snapshot. Applied positionally over the
+        common index prefix: a resumed campaign may run on a different
+        fleet size, in which case extra snapshot entries are dropped and
+        extra live backends keep their unknown (optimistic) EWMA."""
+        ewma = list(doc.get("ewma_point_s", []))
+        admin = list(doc.get("admin", []))
+        with self._lock:
+            for i in range(min(len(ewma), len(self._ewma_s))):
+                self._ewma_s[i] = ewma[i]
+            for i in range(min(len(admin), len(self._admin))):
+                if admin[i] in ("live", "draining", "retired"):
+                    self._admin[i] = admin[i]
 
     # -- config bindings -----------------------------------------------------
     def bind(self, config: dict | None, backends: Sequence[int]):
@@ -535,9 +710,17 @@ class FabricRouter(FabricBackend):
         self._bindings[config_key(config)] = idx
 
     def _allowed(self, config) -> list[int]:
-        return list(
+        idx = list(
             self._bindings.get(config_key(config), range(len(self.backends)))
         )
+        live = [i for i in idx if self._admin[i] == "live"]
+        if live:
+            return live
+        # mid-resize degenerate case: every bound member is draining/retired.
+        # Prefer draining members (still healthy, just being phased out) over
+        # refusing the wave; fall back to the full bound set as a last resort.
+        draining = [i for i in idx if self._admin[i] == "draining"]
+        return draining or idx
 
     def _eligible(self, config, op: str) -> list[int]:
         """Backends that may carry a wave of capability `op` under `config`
@@ -604,12 +787,18 @@ class FabricRouter(FabricBackend):
             return extra
         return np.atleast_2d(np.asarray(extra, float))[idx_lo:idx_hi]
 
-    def _run_shard(self, op: str, i: int, thetas: np.ndarray, extra, config):
+    def _run_shard(self, op: str, i: int, thetas: np.ndarray, extra, config,
+                   cancel: threading.Event | None = None):
         """Evaluate one shard on backend i, failing over on error to another
-        backend ELIGIBLE for `op`. Returns (rows, wall_s, final_backend)."""
+        backend ELIGIBLE for `op`. Returns (rows, wall_s, final_backend), or
+        None when `cancel` was set before this attempt started (the shard's
+        speculative twin already won — don't burn a backend on a dead race).
+        """
         tried: set[int] = set()
         n = len(thetas)
         while True:
+            if cancel is not None and cancel.is_set():
+                return None
             tried.add(i)
             with self._lock:
                 self._inflight[i] += n
@@ -627,6 +816,9 @@ class FabricRouter(FabricBackend):
                 with self._lock:
                     self._inflight[i] -= n
                     self._fail_streak[i] = 0
+                    # success clears the backoff immediately (don't sit out
+                    # the remainder of a penalty earned while flaky)
+                    self._backoff_until[i] = 0.0
                     per_point = wall / n
                     e = self._ewma_s[i]
                     self._ewma_s[i] = (
@@ -647,8 +839,11 @@ class FabricRouter(FabricBackend):
                     self._inflight[i] -= n
                     self._fail_streak[i] += 1
                     self.router_stats["failures"][i] += 1
+                    # exponent capped: the ceiling is what bounds the delay;
+                    # the cap keeps `2 ** streak` finite after a long outage
                     self._backoff_until[i] = time.monotonic() + min(
-                        self.backoff_s * 2 ** (self._fail_streak[i] - 1),
+                        self.backoff_s
+                        * 2.0 ** min(self._fail_streak[i] - 1, self.BACKOFF_EXP_CAP),
                         self.backoff_max_s,
                     )
                 # a steal must respect the wave's capability: a gradient
@@ -668,21 +863,139 @@ class FabricRouter(FabricBackend):
                         key=lambda j: (self._inflight[j] + n) / self._throughput(j),
                     )
 
+    def _spec_deadline_s(self, i: int, n: int) -> float | None:
+        """Wall-time allowance for a shard of `n` points on backend `i`
+        before a speculative duplicate launches; None when speculation is
+        disabled or no backend has an EWMA yet (nothing to predict from)."""
+        if self.spec_factor is None:
+            return None
+        with self._lock:
+            e = self._ewma_s[i]
+            if e is None:
+                known = [x for x in self._ewma_s if x is not None]
+                e = min(known) if known else None
+        if e is None:
+            return None
+        return max(self.spec_min_s, self.spec_factor * e * n)
+
+    def _spec_target(self, op, config, exclude: set[int], n: int) -> int | None:
+        """Pick the backend a late shard is duplicated onto: eligible for
+        `op`, not already racing this shard, not backed off — preferring an
+        idle member, fastest projected finish among those. None when no
+        such backend exists (the primary keeps running alone)."""
+        try:
+            eligible = [j for j in self._eligible(config, op) if j not in exclude]
+        except UnsupportedCapability:
+            return None
+        if not eligible:
+            return None
+        with self._lock:
+            now = time.monotonic()
+            ok = [j for j in eligible if self._backoff_until[j] <= now]
+            if not ok:
+                return None
+            idle = [j for j in ok if self._inflight[j] == 0]
+            pool = idle or ok
+            return min(
+                pool, key=lambda j: (self._inflight[j] + n) / self._throughput(j)
+            )
+
+    def _dispatch_shards(self, op, thetas, extra, config, plan, bounds):
+        """Launch the planned shards and collect their results, duplicating
+        any shard that outlives its EWMA-predicted deadline onto another
+        backend (first result wins, at most ONE duplicate per shard).
+
+        Collection (and the deadline watch) runs in the CALLING thread so
+        speculation never occupies an executor slot — only shard attempts
+        do. A losing attempt that already started still completes on its
+        backend (its EWMA/telemetry updates are honest work), but its rows
+        are dropped HERE, below the fabric cache/tap layer: the wave returns
+        exactly one row per theta, so observers fire exactly once per
+        computed row and `tap_exactly_once` holds under duplication."""
+        t0 = time.monotonic()
+        shards: list[dict] = []
+        for j, (i, _) in enumerate(plan):
+            sl = thetas[bounds[j]:bounds[j + 1]]
+            ex = self._shard_extra(extra, bounds[j], bounds[j + 1])
+            cancel = threading.Event()
+            d = self._spec_deadline_s(i, len(sl))
+            shards.append({
+                "thetas": sl, "extra": ex, "cancel": cancel,
+                "racing": {i},
+                "futs": [self._ex.submit(
+                    self._run_shard, op, i, sl, ex, config, cancel
+                )],
+                "deadline": None if d is None else t0 + d,
+                "result": None, "error": None,
+            })
+        pending = list(shards)
+        while pending:
+            outstanding = [f for s in pending for f in s["futs"] if not f.done()]
+            watch = [
+                s["deadline"] for s in pending
+                if s["deadline"] is not None and len(s["futs"]) == 1
+            ]
+            timeout = None
+            if watch:
+                timeout = max(0.0, min(watch) - time.monotonic())
+            if outstanding:
+                futures_wait(
+                    outstanding, timeout=timeout, return_when=FIRST_COMPLETED
+                )
+            still: list[dict] = []
+            for s in pending:
+                for k, f in enumerate(s["futs"]):
+                    if not f.done() or s["result"] is not None:
+                        continue
+                    try:
+                        out = f.result()
+                    except Exception as e:  # noqa: BLE001 — attempt failed
+                        s["error"] = e
+                        continue
+                    if out is None:  # cancelled before it started
+                        continue
+                    s["result"] = out
+                    s["cancel"].set()
+                    if k > 0:
+                        with self._lock:
+                            self.router_stats["spec_wins"] += 1
+                if s["result"] is not None:
+                    continue
+                if all(f.done() for f in s["futs"]):
+                    # every racing attempt failed (or was cancelled after
+                    # its twin failed) — the shard is genuinely lost
+                    raise s["error"] or RuntimeError(
+                        f"router: {op} shard lost all racing attempts"
+                    )
+                still.append(s)
+            pending = still
+            now = time.monotonic()
+            for s in pending:
+                if (
+                    s["deadline"] is None
+                    or len(s["futs"]) > 1
+                    or now < s["deadline"]
+                ):
+                    continue
+                tgt = self._spec_target(op, config, s["racing"], len(s["thetas"]))
+                if tgt is None:
+                    s["deadline"] = None  # nobody to race against: stop watching
+                    continue
+                s["racing"].add(tgt)
+                with self._lock:
+                    self.router_stats["spec_dispatches"] += 1
+                s["futs"].append(self._ex.submit(
+                    self._run_shard, op, tgt,
+                    s["thetas"], s["extra"], config, s["cancel"],
+                ))
+        return [s["result"] for s in shards]
+
     def dispatch(self, op, thetas, extra, config):
         thetas = np.atleast_2d(np.asarray(thetas, float))
         N = len(thetas)
         plan = self._plan(N, config, op)
         bounds = np.cumsum([0] + [c for _, c in plan])
-        futs = [
-            self._ex.submit(
-                self._run_shard, op, i,
-                thetas[bounds[j]:bounds[j + 1]],
-                self._shard_extra(extra, bounds[j], bounds[j + 1]),
-                config,
-            )
-            for j, (i, _) in enumerate(plan)
-        ]
-        shards = [f.result() for f in futs]
+        shards = self._dispatch_shards(op, thetas, extra, config, plan, bounds)
         if op == "value_and_gradient":
             rows = tuple(
                 np.concatenate([s[0][k] for s in shards], axis=0) for k in (0, 1)
@@ -730,6 +1043,11 @@ class FabricRouter(FabricBackend):
                     else dict(v) if isinstance(v, dict) else v)
                 for k, v in self.router_stats.items()
             }
+            # snapshot the fleet in the SAME lock hold as the counters, so a
+            # concurrent add_backend can't desynchronize the index-aligned
+            # lists from the member list
+            members = list(self.backends)
+            admin = list(self._admin)
             ewma = list(self._ewma_s)
             backed = [
                 max(0.0, round(t - time.monotonic(), 3))
@@ -739,6 +1057,7 @@ class FabricRouter(FabricBackend):
         per_backend = [
             {
                 "kind": b.name,
+                "admin": admin[i],
                 "points": rs["points"][i],
                 "waves": rs["waves_per_backend"][i],
                 "share": round(rs["points"][i] / total, 3),
@@ -748,14 +1067,17 @@ class FabricRouter(FabricBackend):
                 "backoff_remaining_s": backed[i],
                 **b.stats(),
             }
-            for i, b in enumerate(self.backends)
+            for i, b in enumerate(members)
         ]
         return {
             "kind": self.name,
             "policy": self.policy,
-            "n_backends": len(self.backends),
+            "n_backends": len(members),
+            "n_live": sum(1 for a in admin if a == "live"),
             "waves": rs["waves"],
             "steals": rs["steals"],
+            "spec_dispatches": rs["spec_dispatches"],
+            "spec_wins": rs["spec_wins"],
             "op_waves": rs["op_waves"],
             "last_imbalance": rs["last_imbalance"],
             "imbalance_ewma": rs["imbalance_ewma"],
@@ -919,15 +1241,37 @@ class EvaluationFabric:
         for k, v in inc.items():
             bucket[k] += v
 
+    def _require_router(self, what: str) -> FabricRouter:
+        if not isinstance(self.backend, FabricRouter):
+            raise TypeError(
+                f"{what} needs a multi-backend fabric (FabricRouter); "
+                f"this fabric runs a single {self.backend.name!r} backend"
+            )
+        return self.backend
+
     def bind(self, config: dict | None, backends: Sequence[int]):
         """Restrict waves carrying `config` to a backend subset (requires a
         `FabricRouter` backend — see `FabricRouter.bind`)."""
-        if not isinstance(self.backend, FabricRouter):
-            raise TypeError(
-                "bind() needs a multi-backend fabric (FabricRouter); "
-                f"this fabric runs a single {self.backend.name!r} backend"
-            )
-        self.backend.bind(config, backends)
+        self._require_router("bind()").bind(config, backends)
+
+    # -- fleet lifecycle (router passthroughs) --------------------------------
+    def add_backend(self, obj) -> int:
+        """Enroll a new backend in the routed cluster mid-run; returns its
+        stable index (see `FabricRouter.add_backend`)."""
+        return self._require_router("add_backend()").add_backend(obj)
+
+    def drain_backend(self, i: int) -> None:
+        """Phase a routed backend out: no new waves, in-flight completes."""
+        self._require_router("drain_backend()").drain_backend(i)
+
+    def remove_backend(self, i: int, **kw) -> None:
+        """Drain then retire a routed backend (see
+        `FabricRouter.remove_backend`)."""
+        self._require_router("remove_backend()").remove_backend(i, **kw)
+
+    def reinstate_backend(self, i: int) -> None:
+        """Return a drained/retired routed backend to service."""
+        self._require_router("reinstate_backend()").reinstate_backend(i)
 
     # -- training tap --------------------------------------------------------
     def record_observer(self, fn: Callable) -> Callable:

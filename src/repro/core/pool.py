@@ -284,6 +284,12 @@ class ThreadedPool:
 
     __call__ = evaluate
 
+    @property
+    def alive(self) -> bool:
+        """True while the pool accepts work — the liveness probe fleet
+        managers use before (re)enrolling a threaded backend."""
+        return not self._stop.is_set()
+
     def shutdown(self):
         with self._submit_lock:
             # taking the submit lock before raising the flag means every

@@ -40,34 +40,73 @@ class CheckpointManager:
     def _step_dir(self, step: int) -> Path:
         return self.dir / f"step_{step:08d}"
 
-    def latest_step(self) -> int | None:
-        steps = sorted(
+    def _is_complete(self, d: Path) -> bool:
+        """A step directory is complete when its META.json sentinel parses
+        (it is written LAST, after every leaf) and every advertised leaf
+        file is present with an intact npy header + data region. Guards
+        against torn checkpoints — a crash mid-write, a truncated leaf on a
+        filesystem that renamed before the data hit disk — which used to
+        surface as a raise (or garbage) at restore time."""
+        try:
+            meta = json.loads((d / "META.json").read_text())
+            n = int(meta["n_leaves"])
+            for i in range(n):
+                # mmap parses the header and validates the file is large
+                # enough for the advertised shape WITHOUT reading the data
+                np.load(d / f"leaf_{i:05d}.npy", mmap_mode="r")
+            return True
+        except Exception:  # noqa: BLE001 — any tear means incomplete
+            return False
+
+    def _steps(self) -> list[int]:
+        return sorted(
             int(p.name.split("_")[1]) for p in self.dir.glob("step_*") if p.is_dir()
         )
+
+    def completed_steps(self) -> list[int]:
+        """Steps whose directories pass the completeness check."""
+        return [s for s in self._steps() if self._is_complete(self._step_dir(s))]
+
+    def latest_step(self, complete_only: bool = True) -> int | None:
+        """Newest restorable step (pass `complete_only=False` for the raw
+        newest directory, torn or not)."""
+        steps = self.completed_steps() if complete_only else self._steps()
         return steps[-1] if steps else None
 
+    def meta(self, step: int | None = None) -> dict:
+        """The META.json document of a step (newest complete by default) —
+        includes any `manifest` the save recorded."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no complete checkpoints in {self.dir}")
+        return json.loads((self._step_dir(step) / "META.json").read_text())
+
     # -- save ----------------------------------------------------------------
-    def save(self, step: int, state: dict, blocking: bool = True):
-        """state: arbitrary pytree of jax/np arrays."""
+    def save(self, step: int, state: dict, blocking: bool = True,
+             manifest: dict | None = None):
+        """state: arbitrary pytree of jax/np arrays. `manifest`: optional
+        JSON-able document stored in META.json alongside the leaves (e.g.
+        the tree structure, rng state, counters) — readable via `meta()`
+        without loading a single leaf."""
         leaves, treedef = _flatten(state)
         host_leaves = [np.asarray(l) for l in leaves]  # device->host snapshot
         if blocking:
-            self._write(step, host_leaves)
+            self._write(step, host_leaves, manifest)
         else:
             self.wait()  # one async save in flight at a time
             self._save_thread = threading.Thread(
-                target=self._write, args=(step, host_leaves), daemon=True
+                target=self._write, args=(step, host_leaves, manifest), daemon=True
             )
             self._save_thread.start()
 
-    def save_async(self, step: int, state: dict):
-        self.save(step, state, blocking=False)
+    def save_async(self, step: int, state: dict, manifest: dict | None = None):
+        self.save(step, state, blocking=False, manifest=manifest)
 
     def wait(self):
         if self._save_thread is not None and self._save_thread.is_alive():
             self._save_thread.join()
 
-    def _write(self, step: int, host_leaves: list):
+    def _write(self, step: int, host_leaves: list, manifest: dict | None = None):
         final = self._step_dir(step)
         tmp = self.dir / f".tmp_step_{step:08d}_{os.getpid()}"
         if tmp.exists():
@@ -75,8 +114,13 @@ class CheckpointManager:
         tmp.mkdir(parents=True)
         for i, leaf in enumerate(host_leaves):
             np.save(tmp / f"leaf_{i:05d}.npy", leaf)
+        # META.json doubles as the completeness sentinel: written after the
+        # last leaf, so a directory holding leaves but no META is torn
         (tmp / "META.json").write_text(
-            json.dumps({"step": step, "n_leaves": len(host_leaves), "t": time.time()})
+            json.dumps({
+                "step": step, "n_leaves": len(host_leaves), "t": time.time(),
+                "manifest": manifest or {},
+            })
         )
         if final.exists():
             shutil.rmtree(final)
@@ -91,13 +135,30 @@ class CheckpointManager:
             shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     # -- restore ---------------------------------------------------------------
-    def restore(self, state_like, step: int | None = None, shardings=None):
+    def restore(self, state_like, step: int | None = None, shardings=None,
+                host: bool = False):
         """Restore into the structure of `state_like` (pytree of arrays or
-        ShapeDtypeStructs). `shardings`: optional matching pytree of
-        NamedShardings for elastic re-sharding onto the current mesh."""
-        step = step if step is not None else self.latest_step()
+        ShapeDtypeStructs). `host=True` returns plain numpy leaves at their
+        stored precision — `jnp.asarray` would silently downcast float64
+        sampler state to float32 under the default x64-disabled config,
+        which breaks bit-exact campaign resume (`core.fleet`).
+        `shardings`: optional matching pytree of
+        NamedShardings for elastic re-sharding onto the current mesh.
+
+        With `step=None` torn directories are SKIPPED — restore lands on
+        the newest COMPLETE step, so a crash mid-save costs at most one
+        checkpoint interval, never the campaign. An explicitly requested
+        torn step raises (the caller named it; silently substituting a
+        different step would be worse)."""
         if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no complete checkpoints in {self.dir}")
+        elif not self._is_complete(self._step_dir(step)):
+            raise ValueError(
+                f"checkpoint step {step} in {self.dir} is incomplete (torn "
+                f"write); newest complete step: {self.latest_step()}"
+            )
         d = self._step_dir(step)
         meta = json.loads((d / "META.json").read_text())
         leaves, treedef = _flatten(state_like)
@@ -109,6 +170,8 @@ class CheckpointManager:
             arr = arr.astype(ref.dtype) if hasattr(ref, "dtype") else arr
             if sh is not None:
                 out.append(jax.device_put(arr, sh))
+            elif host:
+                out.append(arr)
             else:
                 out.append(jax.numpy.asarray(arr))
         return jax.tree.unflatten(treedef, out), step

@@ -335,3 +335,36 @@ class OnlineGP:
                 "ready": self._gp is not None or len(self) >= self.min_train,
                 "frozen": self.frozen,
             }
+
+    # -- campaign checkpointing ---------------------------------------------
+    def snapshot(self) -> dict:
+        """Consistent copy of the learnable state — the training window plus
+        the staleness/counter bookkeeping — for `CampaignCheckpoint`. Arrays
+        come out as arrays (checkpoint leaves); scalars are JSON-able. The
+        fit itself is NOT captured: `restore` marks it dirty and the first
+        `predict_batch` after resume re-factorizes the restored window."""
+        with self._lock:
+            return {
+                "X": None if self._X is None else self._X.copy(),
+                "y": None if self._y is None else self._y.copy(),
+                "n_seen": self.n_seen,
+                "since_refit": self._since_refit,
+                "err_ewma": self.err_ewma,
+                "frozen": self.frozen,
+            }
+
+    def restore(self, snap: dict) -> None:
+        """Re-apply a `snapshot()` — the window is restored verbatim and the
+        factorization is rebuilt lazily (hyperparameter search included, so
+        a resumed screen trains from exactly the data it had)."""
+        with self._lock:
+            X, y = snap.get("X"), snap.get("y")
+            self._X = None if X is None else np.atleast_2d(np.asarray(X, float)).copy()
+            self._y = None if y is None else np.asarray(y, float).ravel().copy()
+            self.n_seen = int(snap.get("n_seen", 0))
+            self._since_refit = int(snap.get("since_refit", 0))
+            e = snap.get("err_ewma")
+            self.err_ewma = None if e is None else float(e)
+            self.frozen = bool(snap.get("frozen", False))
+            self._gp = None
+            self._hyper_stale = True

@@ -312,6 +312,8 @@ def ensemble_mala(
     precond: np.ndarray | None = None,
     adapt_steps: int = 0,
     target_accept: float = 0.574,
+    checkpoint=None,
+    checkpoint_every: int = 0,
 ) -> EnsembleResult:
     """K lockstep MALA chains: ONE fused value-and-gradient wave per step.
 
@@ -330,19 +332,39 @@ def ensemble_mala(
     `adapt_steps > 0` runs Robbins-Monro step-size adaptation toward
     `target_accept` (MALA's optimal 0.574) over the first `adapt_steps`
     steps, pooled across chains; the adapted eps is reported in
-    `final_step_size`."""
+    `final_step_size`.
+
+    `checkpoint=` / `checkpoint_every=` snapshot the full sampler state
+    (positions, carried gradients, adapted eps, rng stream, sample prefix)
+    every `checkpoint_every` steps through a `core.fleet.CampaignCheckpoint`
+    — a killed run re-invoked with the same checkpoint resumes exactly
+    (same rng stream → identical trajectory)."""
     xs = np.atleast_2d(np.asarray(x0s, float)).copy()
     K, d = xs.shape
     C = np.eye(d) if precond is None else np.atleast_2d(np.asarray(precond, float))
     L = np.linalg.cholesky(C)
     Cinv = np.linalg.inv(C)
     eps = float(step_size)
-    lps, gs = value_grad_logpost(xs)
-    lps = np.asarray(lps, float).ravel()
-    gs = np.atleast_2d(np.asarray(gs, float))
     samples = np.empty((K, n_steps, d))
     lps_out = np.empty((K, n_steps))
     acc = np.zeros(K)
+    start = 0
+    resumed = checkpoint.resume() if checkpoint is not None else None
+    if resumed is not None:
+        arrays, meta, _step = resumed
+        start = int(meta["i_next"])
+        xs = np.array(arrays["xs"])
+        lps = np.array(arrays["lps"]).ravel()
+        gs = np.atleast_2d(np.array(arrays["gs"]))
+        acc = np.array(arrays["acc"]).ravel()
+        samples[:, :start] = arrays["samples"]
+        lps_out[:, :start] = arrays["lps_out"]
+        eps = float(meta["eps"])
+        rng.bit_generator.state = meta["rng_state"]
+    else:
+        lps, gs = value_grad_logpost(xs)
+        lps = np.asarray(lps, float).ravel()
+        gs = np.atleast_2d(np.asarray(gs, float))
 
     def _logq(diff_minus_drift: np.ndarray, e: float) -> np.ndarray:
         # log N(x' ; x + drift, e^2 C) up to the (cancelling) normalization
@@ -350,7 +372,7 @@ def ensemble_mala(
             "ki,ij,kj->k", diff_minus_drift, Cinv, diff_minus_drift
         )
 
-    for i in range(n_steps):
+    for i in range(start, n_steps):
         drift = 0.5 * eps**2 * gs @ C.T
         props = xs + drift + eps * rng.standard_normal((K, d)) @ L.T
         lp_props, g_props = value_grad_logpost(props)
@@ -372,6 +394,22 @@ def ensemble_mala(
         if i < adapt_steps:
             # Robbins-Monro on log eps, pooled acceptance across the block
             eps *= float(np.exp((i + 1) ** -0.6 * (accept.mean() - target_accept)))
+        if (
+            checkpoint is not None and checkpoint_every
+            and (i + 1) % checkpoint_every == 0
+        ):
+            checkpoint.save(
+                i + 1,
+                {
+                    "xs": xs, "lps": lps, "gs": gs, "acc": acc,
+                    "samples": samples[:, :i + 1].copy(),
+                    "lps_out": lps_out[:, :i + 1].copy(),
+                },
+                {
+                    "i_next": i + 1, "eps": float(eps),
+                    "rng_state": rng.bit_generator.state,
+                },
+            )
     return EnsembleResult(
         samples, lps_out, acc / n_steps, K * (n_steps + 1), n_steps + 1,
         n_grad_waves=n_steps + 1, final_step_size=eps,

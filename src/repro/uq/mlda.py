@@ -352,6 +352,8 @@ def ensemble_mlda(
     adapt_interval: int = 1,
     adapt_sd: float | None = None,
     surrogate=None,
+    checkpoint=None,
+    checkpoint_every: int = 0,
 ) -> EnsembleMLDAResult:
     """K MLDA chains advanced in LOCKSTEP (paper §4.3 at fabric scale).
 
@@ -383,7 +385,18 @@ def ensemble_mlda(
     for ANY screen. Call `screen.freeze()` once warm-up traffic has
     trained it (see the module docstring: an unfrozen screen is adaptive
     MCMC). Screen telemetry lands in `result.surrogate` (and in
-    `fabric.telemetry()["screen_pass_rate"]` when fabric-attached)."""
+    `fabric.telemetry()["screen_pass_rate"]` when fabric-attached).
+
+    `checkpoint=` (a `core.fleet.CampaignCheckpoint`, or anything with its
+    `resume()`/`save(step, arrays, meta)` surface) makes the campaign
+    crash-consistent: every `checkpoint_every` finest-level steps the full
+    sampler state — chain positions, sample prefix, adapted proposal, rng
+    bit-generator state, acceptance counters (plus whatever the checkpoint
+    object itself captures: router EWMA, surrogate window) — is snapshotted
+    atomically. A killed driver re-invoked with the same `checkpoint=`
+    resumes from the newest complete snapshot and, because the rng stream
+    is restored exactly, reproduces the uninterrupted run sample for
+    sample."""
     if fabric is not None:
         assert loglik is not None and level_configs is not None, (
             "fabric= requires loglik= and level_configs="
@@ -400,11 +413,59 @@ def ensemble_mlda(
         adapt_interval=adapt_interval, sd=adapt_sd, surrogate=surrogate,
     )
     top = len(logpost_batches) - 1
-    lps = sampler._lp(top, xs)
     out = np.empty((K, n_samples, d))
-    for i in range(n_samples):
+
+    def _snap(i_next: int) -> tuple[dict, dict]:
+        arrays = {
+            "xs": xs, "lps": lps, "samples": out[:, :i_next].copy(),
+            "chol": sampler.chol, "acc": sampler.acc, "tot": sampler.tot,
+        }
+        meta = {
+            "i_next": int(i_next),
+            "evals": [int(v) for v in sampler.evals],
+            "waves": int(sampler.waves),
+            "level0_steps": int(sampler._level0_steps),
+            "rng_state": rng.bit_generator.state,
+        }
+        if sampler.adapter is not None:
+            arrays["adapter_mean"] = sampler.adapter.mean
+            arrays["adapter_scatter"] = sampler.adapter._scatter
+            meta["adapter_n"] = int(sampler.adapter.n)
+        return arrays, meta
+
+    start = 0
+    resumed = checkpoint.resume() if checkpoint is not None else None
+    if resumed is not None:
+        arrays, meta, _step = resumed
+        start = int(meta["i_next"])
+        xs = np.array(arrays["xs"])
+        lps = np.array(arrays["lps"]).ravel()
+        out[:, :start] = arrays["samples"]
+        sampler.chol = np.array(arrays["chol"])
+        sampler.acc = np.array(arrays["acc"])
+        sampler.tot = np.array(arrays["tot"])
+        sampler.evals = [int(v) for v in meta["evals"]]
+        sampler.waves = int(meta["waves"])
+        sampler._level0_steps = int(meta["level0_steps"])
+        if sampler.adapter is not None and "adapter_mean" in arrays:
+            sampler.adapter.mean = np.array(arrays["adapter_mean"])
+            sampler.adapter._scatter = np.array(arrays["adapter_scatter"])
+            sampler.adapter.n = int(meta["adapter_n"])
+        # exact-stream resume: the generator continues precisely where the
+        # snapshot left it, so the resumed trajectory matches the
+        # uninterrupted one sample for sample
+        rng.bit_generator.state = meta["rng_state"]
+    else:
+        lps = sampler._lp(top, xs)
+    for i in range(start, n_samples):
         xs, lps, _ = sampler.step(top, xs, lps)
         out[:, i] = xs
+        if (
+            checkpoint is not None and checkpoint_every
+            and (i + 1) % checkpoint_every == 0
+        ):
+            arrays, meta = _snap(i + 1)
+            checkpoint.save(i + 1, arrays, meta)
     rates = [
         float(sampler.acc[l] / sampler.tot[l]) if sampler.tot[l] else 0.0
         for l in range(len(logpost_batches))
