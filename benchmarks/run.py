@@ -83,6 +83,14 @@ def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
             rate = em["ensemble_evals_per_sec"]
         if isinstance(out, dict) and "router" in out:
             derived += _fmt_imbalance(out["router"])
+    elif name.startswith("fused_sampler"):
+        g, ts = out["gaussian"], out["tsunami_coarse"]
+        derived = (
+            f"fused_speedup_gaussian={g['speedup_vs_host_fabric']:.1f}x;"
+            f"fused_speedup_tsunami={ts['speedup_vs_host_fabric']:.1f}x;"
+            f"stencil_parity_err={out['swe_stencil']['max_abs_err_vs_jitted_ref']:.1e}"
+        )
+        rate = ts["fused_steps_per_sec"] * out["chains"]
     elif name.startswith("elastic_fleet"):
         ch, ck = out["chaos"], out["checkpoint"]
         derived = (
@@ -113,6 +121,7 @@ def main() -> None:
     from benchmarks import (
         batch_eval,
         elastic_fleet,
+        fused_sampler,
         grad_mcmc,
         mlda_tsunami,
         qmc_defects,
@@ -129,6 +138,7 @@ def main() -> None:
         ("qmc_defects_sec4.2", qmc_defects.main),
         ("mlda_tsunami_sec4.3", mlda_tsunami.main),
         ("grad_mcmc_mala", grad_mcmc.main),
+        ("fused_sampler", fused_sampler.main),
         ("surrogate_da_sec4.3", surrogate_da.main),
         ("elastic_fleet", elastic_fleet.main),
         ("roofline", roofline.main),

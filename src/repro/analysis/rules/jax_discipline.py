@@ -16,6 +16,13 @@ Three sub-checks, matching the failure modes that actually bite:
   recompile storm); hoist it or cache per config like
   `ModelPool._dispatch_fn` does.
 
+* **scan bodies are traced bodies** — a function passed to
+  ``jax.lax.scan`` runs under trace exactly like a jit body, so the
+  host-sync checks apply to it too, and additionally any host callback
+  (`jax.pure_callback`, `io_callback`, `jax.debug.callback`) inside one
+  is a device→host round trip *per scan step* — precisely the dispatch
+  overhead the fused sampler blocks (`uq/fused.py`) exist to eliminate.
+
 * **fd-x64** — finite-difference code (`*fd*` functions) that forces
   float32 without an x64 guard: FD step sizes below ~1e-4 underflow the
   difference in single precision, so FD code must either stay in float64
@@ -28,14 +35,20 @@ import ast
 from repro.analysis.common import FileCtx, Finding, dotted
 
 JIT_NAMES = {"jax.jit", "pjit", "jax.pmap"}
+SCAN_NAMES = {"jax.lax.scan", "lax.scan"}
 SHAPE_ATTRS = {"ndim", "shape", "dtype", "size"}
 CAST_FNS = {"float", "int", "bool"}
 SYNC_METHODS = {"item", "tolist"}
+HOST_CALLBACKS = {
+    "jax.pure_callback", "pure_callback",
+    "jax.experimental.io_callback", "io_callback",
+    "jax.debug.callback", "debug.callback",
+}
 
 
-def _imports_jax(tree: ast.AST) -> tuple[bool, bool]:
-    """(imports jax at all, `jit` imported bare from jax)."""
-    has_jax = bare_jit = False
+def _imports_jax(tree: ast.AST) -> tuple[bool, bool, bool]:
+    """(imports jax at all, `jit` imported bare, `scan` imported bare)."""
+    has_jax = bare_jit = bare_scan = False
     for node in ast.walk(tree):
         if isinstance(node, ast.Import):
             if any(a.name == "jax" or a.name.startswith("jax.") for a in node.names):
@@ -45,7 +58,11 @@ def _imports_jax(tree: ast.AST) -> tuple[bool, bool]:
                 has_jax = True
                 if any((a.asname or a.name) == "jit" for a in node.names):
                     bare_jit = True
-    return has_jax, bare_jit
+                if node.module.endswith("lax") and any(
+                    (a.asname or a.name) == "scan" for a in node.names
+                ):
+                    bare_scan = True
+    return has_jax, bare_jit, bare_scan
 
 
 def _is_jit_callable(node: ast.AST, bare_jit: bool) -> bool:
@@ -101,12 +118,16 @@ def _tainted_names(node: ast.AST, tainted: set[str]) -> set[str]:
 
 
 class _JitBodyChecker:
-    """Host-sync checks inside one jitted function."""
+    """Host-sync checks inside one traced function (jit or scan body)."""
 
-    def __init__(self, rule: str, ctx: FileCtx, func, statics: set[str], symbol: str):
+    def __init__(
+        self, rule: str, ctx: FileCtx, func, statics: set[str], symbol: str,
+        kind: str = "jitted",
+    ):
         self.rule = rule
         self.ctx = ctx
         self.func = func
+        self.kind = kind
         self.symbol = f"{symbol}.{func.name}" if symbol != "<module>" else func.name
         args = func.args
         params = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
@@ -137,14 +158,19 @@ class _JitBodyChecker:
                 self.rule, self.ctx.relpath, node.lineno, self.symbol, message
             ))
 
+        body = f"{self.kind} body"
         for node in ast.walk(self.func):
             if isinstance(node, ast.Call):
                 fn = dotted(node.func)
-                if fn in CAST_FNS and node.args:
+                if fn in HOST_CALLBACKS:
+                    flag(node, f"host callback {fn}(...) inside a {body} — "
+                               f"a device->host round trip per traced step; "
+                               f"hoist it out of the scan/jit")
+                elif fn in CAST_FNS and node.args:
                     hit = _tainted_names(node.args[0], self.tainted)
                     if hit:
                         flag(node, f"{fn}() on traced value "
-                                   f"{sorted(hit)[0]!r} inside a jitted body "
+                                   f"{sorted(hit)[0]!r} inside a {body} "
                                    f"forces a host sync / concretization error")
                 elif (
                     isinstance(node.func, ast.Attribute)
@@ -152,25 +178,26 @@ class _JitBodyChecker:
                     and _tainted_names(node.func.value, self.tainted)
                 ):
                     flag(node, f".{node.func.attr}() on a traced value inside "
-                               f"a jitted body forces a host sync")
+                               f"a {body} forces a host sync")
             elif isinstance(node, (ast.If, ast.While)):
                 hit = _tainted_names(node.test, self.tainted)
                 if hit:
                     kind = "if" if isinstance(node, ast.If) else "while"
                     flag(node, f"Python `{kind}` branching on traced value "
-                               f"{sorted(hit)[0]!r} inside a jitted body — "
+                               f"{sorted(hit)[0]!r} inside a {body} — "
                                f"use jnp.where / lax.cond")
         return findings
 
 
 class _Visitor(ast.NodeVisitor):
-    def __init__(self, rule: str, ctx: FileCtx, bare_jit: bool):
+    def __init__(self, rule: str, ctx: FileCtx, bare_jit: bool, bare_scan: bool):
         self.rule = rule
         self.ctx = ctx
         self.bare_jit = bare_jit
+        self.bare_scan = bare_scan
         self.loop_depth = 0
         self.findings: list[Finding] = []
-        self.jitted: list[tuple] = []  # (func_node, statics, enclosing symbol)
+        self.jitted: list[tuple] = []  # (func_node, statics, symbol, kind)
         self._defs_by_name: dict[str, list] = {}
         self._scope: list[str] = []
 
@@ -192,7 +219,7 @@ class _Visitor(ast.NodeVisitor):
                     is_jitted = True
                     statics |= got
         if is_jitted:
-            self.jitted.append((node, statics, self.symbol))
+            self.jitted.append((node, statics, self.symbol, "jitted"))
         self._scope.append(node.name)
         try:
             self.generic_visit(node)
@@ -237,7 +264,17 @@ class _Visitor(ast.NodeVisitor):
                 and isinstance(node.args[0], ast.Name)
             ):
                 for func, sym in self._defs_by_name.get(node.args[0].id, []):
-                    self.jitted.append((func, statics, sym))
+                    self.jitted.append((func, statics, sym, "jitted"))
+        # `lax.scan(step, ...)`: the step function runs under trace exactly
+        # like a jit body — every parameter is traced (no statics).
+        fn = dotted(node.func)
+        if fn in SCAN_NAMES or (self.bare_scan and fn == "scan"):
+            body = node.args[0] if node.args else next(
+                (kw.value for kw in node.keywords if kw.arg == "f"), None
+            )
+            if isinstance(body, ast.Name):
+                for func, sym in self._defs_by_name.get(body.id, []):
+                    self.jitted.append((func, set(), sym, "scan"))
         self.generic_visit(node)
 
 
@@ -245,18 +282,20 @@ class JaxDisciplineRule:
     rule = "jax"
 
     def visit_file(self, ctx: FileCtx) -> list[Finding]:
-        has_jax, bare_jit = _imports_jax(ctx.tree)
+        has_jax, bare_jit, bare_scan = _imports_jax(ctx.tree)
         if not has_jax:
             return []
-        v = _Visitor(self.rule, ctx, bare_jit)
+        v = _Visitor(self.rule, ctx, bare_jit, bare_scan)
         v.visit(ctx.tree)
         findings = list(v.findings)
         seen_funcs: set[int] = set()
-        for func, statics, symbol in v.jitted:
+        for func, statics, symbol, kind in v.jitted:
             if id(func) in seen_funcs:
                 continue
             seen_funcs.add(id(func))
-            findings.extend(_JitBodyChecker(self.rule, ctx, func, statics, symbol).run())
+            findings.extend(
+                _JitBodyChecker(self.rule, ctx, func, statics, symbol, kind).run()
+            )
         findings.extend(self._check_fd_x64(ctx))
         return findings
 

@@ -21,6 +21,7 @@ from repro.analysis.common import FileCtx, Finding, ScopedVisitor, dotted
 HOT_MODULES = (
     "core/fabric.py",
     "core/pool.py",
+    "uq/fused.py",
     "uq/mcmc.py",
     "uq/mlda.py",
 )

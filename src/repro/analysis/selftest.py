@@ -161,6 +161,14 @@ def recompile_storm(xs):
 def _fd_gradient(f, theta):
     theta = np.asarray(theta, np.float32)
     return f(theta)
+
+
+def leaky_fused_block(carry, xs):
+    def step(c, x):
+        val = jax.pure_callback(lambda a: a, c, c)
+        acc = c + val
+        return acc, acc.item()
+    return jax.lax.scan(step, carry, xs)
 ''',
         },
         "good": {
@@ -191,9 +199,21 @@ def _fd_gradient(f, theta):
     # float64 honoring jax.config.x64_enabled elsewhere in this module
     dtype = np.float64 if jax.config.x64_enabled else np.float32
     return f(np.asarray(theta, dtype))
+
+
+def fused_block(carry, xs):
+    def step(c, x):
+        acc = c + jnp.where(x > 0, x, 0.0)
+        return acc, acc
+    return jax.lax.scan(step, carry, xs)
+
+
+def summarize(totals):
+    # .item() on a host-side array outside any traced body is fine
+    return totals.sum().item()
 ''',
         },
-        "expect_min": 3,
+        "expect_min": 5,
     },
     "locks": {
         "bad": {

@@ -34,6 +34,17 @@ from repro.core.interface import (
     pad_to_bucket,
     sens_fn_traceable,
 )
+from repro.kernels.swe import swe_step
+
+
+def _swe_impl() -> str:
+    """SWE stencil implementation for forward evaluate waves: "scan"
+    (default: the inline jnp scan body below), or "pallas"/"interpret"/"ref"
+    to route the flux+limiter+update stencil through the fused
+    `repro.kernels.swe` kernel. Derivative waves always use the inline scan
+    body — `pl.pallas_call` is forward-only here, and the VJP needs the
+    `_sqrt_safe` clamped adjoint anyway."""
+    return os.environ.get("REPRO_SWE_KERNEL", "scan")
 
 G = 9.81
 L_DOMAIN = 400e3  # m
@@ -152,8 +163,10 @@ def _simulate(theta: jax.Array, n_cells: int, smoothed: bool):
 _solve = jax.jit(_simulate, static_argnames=("n_cells", "smoothed"))
 
 
-@partial(jax.jit, static_argnames=("n_cells", "smoothed"))
-def _solve_batch(thetas: jax.Array, n_cells: int, smoothed: bool) -> jax.Array:
+@partial(jax.jit, static_argnames=("n_cells", "smoothed", "swe_impl"))
+def _solve_batch(
+    thetas: jax.Array, n_cells: int, smoothed: bool, swe_impl: str = "scan"
+) -> jax.Array:
     """[N, 2] -> [N, 4]: ONE jitted program solving all N sources in lockstep.
 
     This is a hand-batched rework of `_simulate` tuned for throughput rather
@@ -191,35 +204,42 @@ def _solve_batch(thetas: jax.Array, n_cells: int, smoothed: bool) -> jax.Array:
 
     def step(carry, i):
         h, hu, mx, arr = carry
-        h4 = h**4
-        u = jnp.sqrt(2.0) * h * hu / jnp.sqrt(h4 + jnp.maximum(h, H_DRY) ** 4)
-        # identical operation ORDER to `_simulate`'s step (not just identical
-        # math): float32 reassociation would otherwise drift over the ~1e4
-        # steps of the fine level
-        hsL = jnp.maximum(h[:-1] + bL - bstar, 0.0)  # [C-1, N]
-        hsR = jnp.maximum(h[1:] + bR - bstar, 0.0)
-        uL, uR = u[:-1], u[1:]
-        mL, mR = hsL * uL, hsR * uR  # interface mass fluxes
-        # _sqrt_safe == jnp.sqrt in the primal; only the adjoint differs
-        # (clamped at dry interfaces), keeping this path differentiable
-        a = jnp.maximum(
-            jnp.abs(uL) + _sqrt_safe(G * hsL), jnp.abs(uR) + _sqrt_safe(G * hsR)
-        )
-        Fh = 0.5 * (mL + mR) - 0.5 * a * (hsR - hsL)
-        Fq = 0.5 * ((mL * uL + 0.5 * G * hsL * hsL) + (mR * uR + 0.5 * G * hsR * hsR)) \
-            - 0.5 * a * (mR - mL)
-        # momentum flux + well-balanced interface correction, as seen from
-        # the left cell (A) and from the right cell (B)
-        A = Fq + 0.5 * G * (h[:-1] ** 2 - hsL**2)
-        B = Fq + 0.5 * G * (h[1:] ** 2 - hsR**2)
-        # flux divergence per cell; reflective walls (zero mass flux,
-        # hydrostatic pressure G/2 h^2)
-        div_h = jnp.concatenate([Fh[:1], Fh[1:] - Fh[:-1], -Fh[-1:]], 0)
-        pL = 0.5 * G * h[:1] ** 2
-        pR = 0.5 * G * h[-1:] ** 2
-        div_hu = jnp.concatenate([A[:1] - pL, A[1:] - B[:-1], pR - B[-1:]], 0)
-        h_new = jnp.maximum(h - dt / dx * div_h, 0.0)
-        hu_new = jnp.where(h_new > H_DRY, hu - dt / dx * div_hu, 0.0)
+        if swe_impl != "scan":
+            # fused kernels.swe stencil: flux + limiter + update in one
+            # kernel pass per step (forward waves only — see `_swe_impl`)
+            h_new, hu_new = swe_step(
+                h, hu, b, dt_dx=float(dt / dx), g=G, h_dry=H_DRY, impl=swe_impl
+            )
+        else:
+            h4 = h**4
+            u = jnp.sqrt(2.0) * h * hu / jnp.sqrt(h4 + jnp.maximum(h, H_DRY) ** 4)
+            # identical operation ORDER to `_simulate`'s step (not just
+            # identical math): float32 reassociation would otherwise drift
+            # over the ~1e4 steps of the fine level
+            hsL = jnp.maximum(h[:-1] + bL - bstar, 0.0)  # [C-1, N]
+            hsR = jnp.maximum(h[1:] + bR - bstar, 0.0)
+            uL, uR = u[:-1], u[1:]
+            mL, mR = hsL * uL, hsR * uR  # interface mass fluxes
+            # _sqrt_safe == jnp.sqrt in the primal; only the adjoint differs
+            # (clamped at dry interfaces), keeping this path differentiable
+            a = jnp.maximum(
+                jnp.abs(uL) + _sqrt_safe(G * hsL), jnp.abs(uR) + _sqrt_safe(G * hsR)
+            )
+            Fh = 0.5 * (mL + mR) - 0.5 * a * (hsR - hsL)
+            Fq = 0.5 * ((mL * uL + 0.5 * G * hsL * hsL) + (mR * uR + 0.5 * G * hsR * hsR)) \
+                - 0.5 * a * (mR - mL)
+            # momentum flux + well-balanced interface correction, as seen
+            # from the left cell (A) and from the right cell (B)
+            A = Fq + 0.5 * G * (h[:-1] ** 2 - hsL**2)
+            B = Fq + 0.5 * G * (h[1:] ** 2 - hsR**2)
+            # flux divergence per cell; reflective walls (zero mass flux,
+            # hydrostatic pressure G/2 h^2)
+            div_h = jnp.concatenate([Fh[:1], Fh[1:] - Fh[:-1], -Fh[-1:]], 0)
+            pL = 0.5 * G * h[:1] ** 2
+            pR = 0.5 * G * h[-1:] ** 2
+            div_hu = jnp.concatenate([A[:1] - pL, A[1:] - B[:-1], pR - B[-1:]], 0)
+            h_new = jnp.maximum(h - dt / dx * div_h, 0.0)
+            hu_new = jnp.where(h_new > H_DRY, hu - dt / dx * div_hu, 0.0)
         eta_b = jnp.stack([h_new[r] for r in buoy_rows], 0) - h0_buoy[:, None]  # [2, N]
         mx = jnp.maximum(mx, eta_b)
         arr = jnp.where((jnp.abs(eta_b) > ARRIVAL_THRESH) & (arr < 0), i, arr)
@@ -367,7 +387,7 @@ class TsunamiModel(Model):
         def solve_chunk(lo: int) -> np.ndarray:
             part = thetas[lo : lo + chunk]
             padded, _ = pad_to_bucket(part, next_pow2(max(len(part), _CHUNK_MIN)))
-            out = _solve_batch(jnp.asarray(padded), n_cells, smoothed)
+            out = _solve_batch(jnp.asarray(padded), n_cells, smoothed, _swe_impl())
             return np.asarray(out, float)[: len(part)]
 
         starts = range(0, N, chunk)

@@ -1194,6 +1194,14 @@ class EvaluationFabric:
             # pay one (see `uq.surrogate.SurrogateScreen` / `note_screen`)
             "surrogate_screened": 0,
             "surrogate_passed": 0,
+            # sampler-step economics (see `note_steps`): MCMC steps advanced
+            # and the dispatches they cost. A host lockstep sampler pays one
+            # dispatch per step (steps == waves); a fused `uq.fused` block
+            # advances S steps per dispatch — counting waves alone would
+            # undercount sampler progress S-fold, so ESS-per-wave benchmarks
+            # read `steps_per_wave` instead
+            "sampler_steps": 0,
+            "sampler_waves": 0,
             # per-wave fill fraction accumulator: collector waves count
             # len(wave)/max_batch, explicit evaluate_batch waves are full by
             # definition (they bypass the collector cap)
@@ -1321,6 +1329,17 @@ class EvaluationFabric:
         with self._lock:
             self.stats["surrogate_screened"] += int(screened)
             self.stats["surrogate_passed"] += int(passed)
+
+    def note_steps(self, steps: int, waves: int = 1) -> None:
+        """Fold sampler-step traffic into the telemetry: `steps` MCMC steps
+        were advanced for the cost of `waves` dispatches. Host lockstep
+        samplers note (1, waves=1) per proposal wave; fused device-resident
+        blocks (`uq.fused`) note (S, waves=1) per block — `telemetry()`
+        derives `steps_per_wave` so fused and per-step runs stay comparable
+        on the same axis."""
+        with self._lock:
+            self.stats["sampler_steps"] += int(steps)
+            self.stats["sampler_waves"] += int(waves)
 
     # -- cache --------------------------------------------------------------
     def _key(self, theta: np.ndarray, config: dict | None, op: str = "evaluate",
@@ -1682,6 +1701,10 @@ class EvaluationFabric:
         # fraction of surrogate-screened proposals that survived to pay a
         # real wave; None until a screen has run (see note_screen)
         s["screen_pass_rate"] = s["surrogate_passed"] / scr if scr else None
+        # sampler steps advanced per dispatch: 1.0 for host lockstep loops,
+        # ~S under fused blocks; None until a sampler has noted steps
+        sw = s["sampler_waves"]
+        s["steps_per_wave"] = s["sampler_steps"] / sw if sw else None
         s["mean_wave_size"] = s["points"] / s["waves"] if s["waves"] else 0.0
         s["max_batch"] = self.max_batch
         # mean fill fraction (0..1]: collector waves relative to the wave

@@ -391,6 +391,28 @@ class CampaignCheckpoint:
             self._surrogate = surrogate
         return self
 
+    # -- rng key manifest ----------------------------------------------------
+    # The host samplers snapshot `rng.bit_generator.state` (JSON-able, rides
+    # in META.json); the device-resident fused samplers (`uq.fused`) carry a
+    # jax PRNG key instead. Its raw key data is an ordinary uint32 array, so
+    # it lands as an npy leaf like any other sampler array — these two
+    # helpers are the boundary where a typed key becomes checkpoint payload
+    # and back, keeping resume bit-exact (same key data -> same stream).
+
+    @staticmethod
+    def pack_key(key) -> np.ndarray:
+        """Typed jax PRNG key -> raw key-data array for the npy payload."""
+        import jax
+
+        return np.asarray(jax.random.key_data(key))
+
+    @staticmethod
+    def unpack_key(data: np.ndarray):
+        """Raw key-data array (as restored) -> typed jax PRNG key."""
+        import jax
+
+        return jax.random.wrap_key_data(np.asarray(data))
+
     def _router_obj(self) -> FabricRouter | None:
         r = self._router
         if isinstance(r, EvaluationFabric):

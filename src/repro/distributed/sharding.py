@@ -120,6 +120,23 @@ def tree_shardings(ctx: ShardingCtx, spec_tree):
     )
 
 
+def chain_carry_shardings(ctx: ShardingCtx, carry: dict, K: int) -> dict:
+    """Mesh shardings for a fused-sampler scan carry (`uq.fused`): leaves
+    with a leading chain axis of length `K` shard over the logical batch
+    axes — the same discipline the evaluate path applies to its [N, d]
+    waves — while scalars (step size, step counter) and the PRNG key
+    replicate. Keyed by the carry dict's own structure so RWM ({key, xs,
+    lps, acc}) and MALA ({... gs, eps, i}) both resolve without a
+    per-sampler spec table."""
+    batch = ctx.sharding("batch")
+    rep = ctx.replicated()
+    return {
+        k: batch if (hasattr(v, "ndim") and v.ndim >= 1 and v.shape[0] == K)
+        else rep
+        for k, v in carry.items()
+    }
+
+
 def sanitize_spec(spec: P, shape: Sequence[int], ctx: ShardingCtx) -> P:
     """Drop mesh axes that do not divide the corresponding dimension
     (e.g. kv_heads=8 cannot shard over model=16 -> replicate)."""

@@ -1,0 +1,5 @@
+from repro.kernels.swe.ops import swe_step
+from repro.kernels.swe.ref import swe_step_ref
+from repro.kernels.swe.swe import swe_step_kernel
+
+__all__ = ["swe_step", "swe_step_ref", "swe_step_kernel"]

@@ -1,0 +1,36 @@
+"""Public wrapper for the fused SWE stencil kernel."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.swe.ref import swe_step_ref
+from repro.kernels.swe.swe import swe_step_kernel
+
+
+def swe_step(
+    h: jax.Array,  # [C, N]
+    hu: jax.Array,  # [C, N]
+    b: jax.Array,  # [C] or [C, 1]
+    *,
+    dt_dx: float,
+    g: float = 9.81,
+    h_dry: float = 0.05,
+    impl: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One fused Rusanov flux + limiter + update step on a [cells, batch] block."""
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "interpret"
+    if b.ndim == 1:
+        b = b[:, None]
+    if impl == "ref":
+        return swe_step_ref(h, hu, b, dt_dx, g=g, h_dry=h_dry)
+    N = h.shape[1]
+    # tile must divide the batch; batch sizes are pow2-bucketed upstream so
+    # this only clamps, never pads
+    blk = 128
+    while N % blk:
+        blk //= 2
+    return swe_step_kernel(
+        h, hu, b, dt_dx=dt_dx, g=g, h_dry=h_dry,
+        block_batch=blk, interpret=(impl == "interpret"),
+    )

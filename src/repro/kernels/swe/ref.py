@@ -1,0 +1,59 @@
+"""Oracle for the fused SWE stencil kernel.
+
+One Rusanov / hydrostatic-reconstruction finite-volume step over a
+``[cells, batch]`` state block — the exact arithmetic (and the exact
+OPERATION ORDER) of the scan body in `repro.apps.tsunami._solve_batch`:
+hydrostatic reconstruction against the interface bathymetry (Audusse et
+al., well-balanced with wetting & drying), Rusanov flux, well-balanced
+momentum corrections, reflective walls, positivity/dry-cell limiter.
+`apps.tsunami` keeps this math inline as its default scan body; the Pallas
+kernel (`repro.kernels.swe.swe`) must match this reference bit-for-bit in
+interpret mode, which is what `tests/test_kernels.py` gates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+G = 9.81
+H_DRY = 0.05
+
+
+def swe_step_ref(
+    h: jax.Array,  # [C, N] water depth
+    hu: jax.Array,  # [C, N] momentum
+    b: jax.Array,  # [C, 1] bathymetry
+    dt_dx: float,
+    *,
+    g: float = G,
+    h_dry: float = H_DRY,
+) -> tuple[jax.Array, jax.Array]:
+    """One forward-Euler SWE step: (h, hu) -> (h_new, hu_new)."""
+    bL, bR = b[:-1], b[1:]
+    bstar = jnp.maximum(bL, bR)
+    h4 = h**4
+    # desingularized velocity (no division blow-up at the shoreline)
+    u = jnp.sqrt(2.0) * h * hu / jnp.sqrt(h4 + jnp.maximum(h, h_dry) ** 4)
+    hsL = jnp.maximum(h[:-1] + bL - bstar, 0.0)  # [C-1, N]
+    hsR = jnp.maximum(h[1:] + bR - bstar, 0.0)
+    uL, uR = u[:-1], u[1:]
+    mL, mR = hsL * uL, hsR * uR  # interface mass fluxes
+    a = jnp.maximum(
+        jnp.abs(uL) + jnp.sqrt(g * hsL), jnp.abs(uR) + jnp.sqrt(g * hsR)
+    )
+    Fh = 0.5 * (mL + mR) - 0.5 * a * (hsR - hsL)
+    Fq = 0.5 * ((mL * uL + 0.5 * g * hsL * hsL) + (mR * uR + 0.5 * g * hsR * hsR)) \
+        - 0.5 * a * (mR - mL)
+    # momentum flux + well-balanced interface correction, as seen from the
+    # left cell (A) and from the right cell (B)
+    A = Fq + 0.5 * g * (h[:-1] ** 2 - hsL**2)
+    B = Fq + 0.5 * g * (h[1:] ** 2 - hsR**2)
+    # flux divergence per cell; reflective walls (zero mass flux,
+    # hydrostatic pressure g/2 h^2)
+    div_h = jnp.concatenate([Fh[:1], Fh[1:] - Fh[:-1], -Fh[-1:]], 0)
+    pL = 0.5 * g * h[:1] ** 2
+    pR = 0.5 * g * h[-1:] ** 2
+    div_hu = jnp.concatenate([A[:1] - pL, A[1:] - B[:-1], pR - B[-1:]], 0)
+    h_new = jnp.maximum(h - dt_dx * div_h, 0.0)
+    hu_new = jnp.where(h_new > h_dry, hu - dt_dx * div_hu, 0.0)
+    return h_new, hu_new

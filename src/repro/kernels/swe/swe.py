@@ -1,0 +1,80 @@
+"""Fused SWE stencil Pallas kernel (flux + limiter + update in one pass).
+
+Batch-tiled: the grid runs over blocks of the trailing batch axis; each tile
+loads a full `[cells, Nb]` column set into VMEM, computes desingularized
+velocities, hydrostatic reconstruction, Rusanov fluxes, well-balanced
+momentum corrections, flux divergences with reflective walls, and the
+positivity/dry-cell limiter — one HBM round trip per state array per step
+instead of the XLA default's materialized intermediate chain. Columns are
+independent, so batch tiling is bit-safe; the cell axis stays whole inside a
+tile because the stencil couples neighbouring cells.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _swe_step_kernel(h_ref, hu_ref, b_ref, ho_ref, huo_ref, *,
+                     dt_dx: float, g: float, h_dry: float):
+    h = h_ref[...]  # [C, Nb]
+    hu = hu_ref[...]
+    b = b_ref[...]  # [C, 1]
+    bL, bR = b[:-1], b[1:]
+    bstar = jnp.maximum(bL, bR)
+    h4 = h**4
+    u = jnp.sqrt(2.0) * h * hu / jnp.sqrt(h4 + jnp.maximum(h, h_dry) ** 4)
+    hsL = jnp.maximum(h[:-1] + bL - bstar, 0.0)
+    hsR = jnp.maximum(h[1:] + bR - bstar, 0.0)
+    uL, uR = u[:-1], u[1:]
+    mL, mR = hsL * uL, hsR * uR
+    a = jnp.maximum(
+        jnp.abs(uL) + jnp.sqrt(g * hsL), jnp.abs(uR) + jnp.sqrt(g * hsR)
+    )
+    Fh = 0.5 * (mL + mR) - 0.5 * a * (hsR - hsL)
+    Fq = 0.5 * ((mL * uL + 0.5 * g * hsL * hsL) + (mR * uR + 0.5 * g * hsR * hsR)) \
+        - 0.5 * a * (mR - mL)
+    A = Fq + 0.5 * g * (h[:-1] ** 2 - hsL**2)
+    B = Fq + 0.5 * g * (h[1:] ** 2 - hsR**2)
+    div_h = jnp.concatenate([Fh[:1], Fh[1:] - Fh[:-1], -Fh[-1:]], 0)
+    pL = 0.5 * g * h[:1] ** 2
+    pR = 0.5 * g * h[-1:] ** 2
+    div_hu = jnp.concatenate([A[:1] - pL, A[1:] - B[:-1], pR - B[-1:]], 0)
+    h_new = jnp.maximum(h - dt_dx * div_h, 0.0)
+    ho_ref[...] = h_new
+    huo_ref[...] = jnp.where(h_new > h_dry, hu - dt_dx * div_hu, 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("dt_dx", "g", "h_dry", "block_batch", "interpret")
+)
+def swe_step_kernel(
+    h: jax.Array,  # [C, N]
+    hu: jax.Array,  # [C, N]
+    b: jax.Array,  # [C, 1]
+    *,
+    dt_dx: float,
+    g: float = 9.81,
+    h_dry: float = 0.05,
+    block_batch: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    C, N = h.shape
+    Nb = min(block_batch, N)
+    assert N % Nb == 0, f"batch {N} not a multiple of tile {Nb}"
+    kern = functools.partial(_swe_step_kernel, dt_dx=dt_dx, g=g, h_dry=h_dry)
+    spec = pl.BlockSpec((C, Nb), lambda i: (0, i))
+    return pl.pallas_call(
+        kern,
+        grid=(N // Nb,),
+        in_specs=[spec, spec, pl.BlockSpec((C, 1), lambda i: (0, 0))],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((C, N), h.dtype),
+            jax.ShapeDtypeStruct((C, N), hu.dtype),
+        ),
+        interpret=interpret,
+    )(h, hu, b)

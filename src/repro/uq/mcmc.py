@@ -158,7 +158,22 @@ def batched_logpost(
 
     logpost.reset = reset
     logpost.reset()
+    logpost.note_steps = _steps_hook(evaluator)
     return logpost
+
+
+def _steps_hook(evaluator):
+    """Forward sampler-step accounting to the evaluator's telemetry when it
+    keeps one (`EvaluationFabric.note_steps`); no-op otherwise. The host
+    samplers note 1 step per proposal wave, the fused runners S per block —
+    `telemetry()['steps_per_wave']` then stays comparable across both."""
+    ev_note = getattr(evaluator, "note_steps", None)
+
+    def note_steps(steps: int = 1, waves: int = 1):
+        if ev_note is not None:
+            ev_note(steps, waves=waves)
+
+    return note_steps
 
 
 def batched_value_grad_logpost(
@@ -219,7 +234,19 @@ def batched_value_grad_logpost(
 
     value_grad.reset = reset
     value_grad.reset()
+    value_grad.note_steps = _steps_hook(evaluator)
     return value_grad
+
+
+def _fused_key(fused_key, rng: np.random.Generator):
+    """Device key stream for the fused path: explicit `fused_key` wins
+    (reproducible key-manifest workflows); otherwise seed one from the host
+    rng so `rng`-seeded callers stay deterministic."""
+    if fused_key is not None:
+        return fused_key
+    import jax
+
+    return jax.random.key(int(rng.integers(0, 2**31 - 1)))
 
 
 def ensemble_random_walk_metropolis(
@@ -233,6 +260,12 @@ def ensemble_random_walk_metropolis(
     adapt_start: int = 25,
     adapt_interval: int = 1,
     sd: float | None = None,
+    fused_steps: int | None = None,
+    fused_key=None,
+    ctx=None,
+    telemetry=None,
+    checkpoint=None,
+    checkpoint_every: int = 0,
 ) -> EnsembleResult:
     """K lockstep RWM chains: ONE [K, d] -> [K] model wave per step.
 
@@ -245,11 +278,35 @@ def ensemble_random_walk_metropolis(
     (one einsum per step, K observations per update): after `adapt_start`
     steps the proposal Cholesky refreshes every `adapt_interval` steps from
     `sd * pooled_cov + eps I` (sd defaults to Haario's 2.4^2/d). The pooled
-    estimate warms up K-fold faster than single-chain adaptation."""
+    estimate warms up K-fold faster than single-chain adaptation.
+
+    `fused_steps=S` switches to the device-resident block sampler
+    (`uq.fused`): `logpost_batch` must then be a jax-traceable
+    ``[K, d] -> [K]`` callable (see `uq.fused.gaussian_likelihood_target`),
+    proposals are drawn from a `jax.random` stream seeded from `rng` (or
+    `fused_key`), and S steps run per dispatch — the host loop here stays
+    the reference path and the only one for non-JAX backends. Incompatible
+    with `adaptive=` (per-block covariance refits would change the kernel
+    mid-block)."""
+    if fused_steps is not None:
+        if adaptive:
+            raise ValueError(
+                "fused_steps= and adaptive= are incompatible: Haario "
+                "adaptation refits the proposal on the host every step"
+            )
+        from repro.uq import fused as _fused
+
+        return _fused.fused_ensemble_rwm(
+            logpost_batch, x0s, n_steps, prop_cov,
+            _fused_key(fused_key, rng), fused_steps=fused_steps, ctx=ctx,
+            telemetry=telemetry, checkpoint=checkpoint,
+            checkpoint_every=checkpoint_every,
+        )
     xs = np.atleast_2d(np.asarray(x0s, float)).copy()
     K, d = xs.shape
     L = np.linalg.cholesky(np.atleast_2d(prop_cov))
     adapter = PooledCovarianceAdapter(d, sd=sd) if adaptive else None
+    note = getattr(logpost_batch, "note_steps", None)
     lps = np.asarray(logpost_batch(xs), float).ravel()
     samples = np.empty((K, n_steps, d))
     lps_out = np.empty((K, n_steps))
@@ -263,6 +320,8 @@ def ensemble_random_walk_metropolis(
         acc += accept
         samples[:, i] = xs
         lps_out[:, i] = lps
+        if note is not None:
+            note(1, waves=1)
         if adapter is not None:
             adapter.update(xs)
             if i >= adapt_start and (i - adapt_start) % adapt_interval == 0:
@@ -280,11 +339,31 @@ def ensemble_pcn(
     n_steps: int,
     beta: float,
     rng: np.random.Generator,
+    *,
+    fused_steps: int | None = None,
+    fused_key=None,
+    prior_chol: np.ndarray | None = None,
+    ctx=None,
+    telemetry=None,
 ) -> EnsembleResult:
     """K lockstep pCN chains (Gaussian priors; dimension-robust); ONE model
-    wave per step. `prior_sample(rng, K)` draws [K, d] prior samples."""
+    wave per step. `prior_sample(rng, K)` draws [K, d] prior samples.
+
+    `fused_steps=S` runs the device-resident block sampler instead:
+    `loglik_batch` must be jax-traceable, the (centered) Gaussian prior is
+    given by its Cholesky factor `prior_chol` (default I) and sampled
+    on-device, and `prior_sample` is unused."""
+    if fused_steps is not None:
+        from repro.uq import fused as _fused
+
+        return _fused.fused_ensemble_pcn(
+            loglik_batch, x0s, n_steps, beta, _fused_key(fused_key, rng),
+            prior_chol=prior_chol, fused_steps=fused_steps, ctx=ctx,
+            telemetry=telemetry,
+        )
     xs = np.atleast_2d(np.asarray(x0s, float)).copy()
     K, _ = xs.shape
+    note = getattr(loglik_batch, "note_steps", None)
     lls = np.asarray(loglik_batch(xs), float).ravel()
     samples = np.empty((K, n_steps, xs.shape[1]))
     lls_out = np.empty((K, n_steps))
@@ -299,6 +378,8 @@ def ensemble_pcn(
         acc += accept
         samples[:, i] = xs
         lls_out[:, i] = lls
+        if note is not None:
+            note(1, waves=1)
     return EnsembleResult(samples, lls_out, acc / n_steps, K * (n_steps + 1), n_steps + 1)
 
 
@@ -314,6 +395,10 @@ def ensemble_mala(
     target_accept: float = 0.574,
     checkpoint=None,
     checkpoint_every: int = 0,
+    fused_steps: int | None = None,
+    fused_key=None,
+    ctx=None,
+    telemetry=None,
 ) -> EnsembleResult:
     """K lockstep MALA chains: ONE fused value-and-gradient wave per step.
 
@@ -338,13 +423,30 @@ def ensemble_mala(
     (positions, carried gradients, adapted eps, rng stream, sample prefix)
     every `checkpoint_every` steps through a `core.fleet.CampaignCheckpoint`
     — a killed run re-invoked with the same checkpoint resumes exactly
-    (same rng stream → identical trajectory)."""
+    (same rng stream → identical trajectory).
+
+    `fused_steps=S` switches to the device-resident block sampler:
+    `value_grad_logpost` must then be a jax-traceable ``[K, d] -> [K]``
+    LOG-POSTERIOR (not a value-and-grad pair) — the drift gradients are
+    taken on-device with one vjp per step — and checkpoints land at block
+    boundaries with the rng key manifest instead of every step."""
+    if fused_steps is not None:
+        from repro.uq import fused as _fused
+
+        return _fused.fused_ensemble_mala(
+            value_grad_logpost, x0s, n_steps, step_size,
+            _fused_key(fused_key, rng), precond=precond,
+            adapt_steps=adapt_steps, target_accept=target_accept,
+            fused_steps=fused_steps, ctx=ctx, telemetry=telemetry,
+            checkpoint=checkpoint, checkpoint_every=checkpoint_every,
+        )
     xs = np.atleast_2d(np.asarray(x0s, float)).copy()
     K, d = xs.shape
     C = np.eye(d) if precond is None else np.atleast_2d(np.asarray(precond, float))
     L = np.linalg.cholesky(C)
     Cinv = np.linalg.inv(C)
     eps = float(step_size)
+    note = getattr(value_grad_logpost, "note_steps", None)
     samples = np.empty((K, n_steps, d))
     lps_out = np.empty((K, n_steps))
     acc = np.zeros(K)
@@ -391,6 +493,8 @@ def ensemble_mala(
         acc += accept
         samples[:, i] = xs
         lps_out[:, i] = lps
+        if note is not None:
+            note(1, waves=1)
         if i < adapt_steps:
             # Robbins-Monro on log eps, pooled acceptance across the block
             eps *= float(np.exp((i + 1) ** -0.6 * (accept.mean() - target_accept)))
@@ -445,6 +549,7 @@ def ensemble_hmc(
     # p ~ N(0, C^-1): p = L^-T xi  (so p^T C p = |xi|^2)
     Linv_T = np.linalg.inv(L).T
     eps = float(step_size)
+    note = getattr(value_grad_logpost, "note_steps", None)
     lps, gs = value_grad_logpost(xs)
     lps = np.asarray(lps, float).ravel()
     gs = np.atleast_2d(np.asarray(gs, float))
@@ -476,6 +581,8 @@ def ensemble_hmc(
         acc += accept
         samples[:, i] = xs
         lps_out[:, i] = lps
+        if note is not None:
+            note(1, waves=n_leapfrog)
         if i < adapt_steps:
             eps *= float(np.exp((i + 1) ** -0.6 * (accept.mean() - target_accept)))
     return EnsembleResult(

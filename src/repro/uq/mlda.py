@@ -241,7 +241,7 @@ class _EnsembleLevelSampler:
     def __init__(self, logpost_batches, subsampling, prop_cov, rng, K,
                  adaptive: bool = False, adapt_start: int = 50,
                  adapt_interval: int = 1, sd: float | None = None,
-                 surrogate=None):
+                 surrogate=None, fused_level0=None, fused_key=None):
         self.logposts = list(logpost_batches)
         self.subsampling = list(subsampling)
         self.rng = rng
@@ -258,6 +258,12 @@ class _EnsembleLevelSampler:
         self.adapt_start = int(adapt_start)
         self.adapt_interval = max(1, int(adapt_interval))
         self._level0_steps = 0
+        # device-resident level-0 subchains (`uq.fused`): the whole coarse
+        # subchain between two level-1 acceptance tests becomes ONE jitted
+        # scan dispatch against this traceable logpost
+        self.fused_level0 = fused_level0
+        self._fused_key = fused_key
+        self._fused_run = None
 
     def _lp(self, level: int, xs: np.ndarray) -> np.ndarray:
         """[M, d] -> [M] in ONE wave."""
@@ -309,13 +315,36 @@ class _EnsembleLevelSampler:
             return xs, lps, accept
         # K coarse subchains advanced in lockstep, started from xs
         sub = self.subsampling[level - 1]
-        ys = xs.copy()
-        lp_ys_coarse = self._lp(level - 1, ys)  # cache-served when fabric-backed
-        lp_start_coarse = lp_ys_coarse.copy()
-        moved = np.zeros(K, bool)  # any subchain proposal accepted, per chain
-        for _ in range(sub):
-            ys, lp_ys_coarse, acc = self.step(level - 1, ys, lp_ys_coarse)
-            moved |= acc
+        if level == 1 and self.fused_level0 is not None:
+            # device-resident subchain: `sub` coarse RWM steps for all K
+            # chains in ONE jitted scan dispatch — the DA ratio below uses
+            # lp_start/lp_ys from the SAME traceable coarse logpost, so the
+            # correction is exact; only the fine test pays a fabric wave
+            if self._fused_run is None:
+                from repro.uq.fused import make_fused_rwm_subchain
+
+                self._fused_run = make_fused_rwm_subchain(
+                    self.fused_level0, sub, self.chol
+                )
+            ys, lp_ys_coarse, lp_start_coarse, sub_acc, self._fused_key = (
+                self._fused_run(xs, self._fused_key)
+            )
+            moved = sub_acc > 0
+            self.evals[0] += K * (sub + 1)
+            self.waves += 2  # start-lps dispatch + the fused block
+            self.acc[0] += sub_acc.sum()
+            self.tot[0] += K * sub
+            note = getattr(self.logposts[0], "note_steps", None)
+            if note is not None:
+                note(sub, waves=1)
+        else:
+            ys = xs.copy()
+            lp_ys_coarse = self._lp(level - 1, ys)  # cache-served when fabric-backed
+            lp_start_coarse = lp_ys_coarse.copy()
+            moved = np.zeros(K, bool)  # any subchain proposal accepted, per chain
+            for _ in range(sub):
+                ys, lp_ys_coarse, acc = self.step(level - 1, ys, lp_ys_coarse)
+                moved |= acc
         accept = np.zeros(K, bool)
         if moved.any():
             # fine acceptance test for ALL moved chains in ONE wave; chains
@@ -354,6 +383,8 @@ def ensemble_mlda(
     surrogate=None,
     checkpoint=None,
     checkpoint_every: int = 0,
+    fused_level0=None,
+    fused_key=None,
 ) -> EnsembleMLDAResult:
     """K MLDA chains advanced in LOCKSTEP (paper §4.3 at fabric scale).
 
@@ -396,7 +427,27 @@ def ensemble_mlda(
     atomically. A killed driver re-invoked with the same `checkpoint=`
     resumes from the newest complete snapshot and, because the rng stream
     is restored exactly, reproduces the uninterrupted run sample for
-    sample."""
+    sample.
+
+    `fused_level0=` (a jax-traceable ``[K, d] -> [K]`` coarse log-
+    posterior, e.g. `uq.fused.gaussian_likelihood_target` over the coarse
+    solver's native batch program) runs each level-0 subchain as ONE
+    device-resident scan dispatch instead of `subsampling[0]` host waves —
+    the `uq.fused` key stream (seeded from `rng`, or passed as
+    `fused_key=`) rides checkpoints as a key-data manifest so resume stays
+    bit-exact. Incompatible with `adaptive=` (the host adaptation path runs
+    inside the level-0 loop this replaces) and `surrogate=` (the GP screen
+    taps host-side coarse traffic that no longer exists)."""
+    if fused_level0 is not None and (adaptive or surrogate is not None):
+        raise ValueError(
+            "fused_level0= is incompatible with adaptive= and surrogate=: "
+            "both act inside the host level-0 loop that fused subchains "
+            "replace (run them on the host path, or freeze/disable them)"
+        )
+    if fused_level0 is not None and fused_key is None:
+        import jax
+
+        fused_key = jax.random.key(int(rng.integers(0, 2**31 - 1)))
     if fabric is not None:
         assert loglik is not None and level_configs is not None, (
             "fabric= requires loglik= and level_configs="
@@ -411,6 +462,7 @@ def ensemble_mlda(
         logpost_batches, subsampling, prop_cov, rng, K,
         adaptive=adaptive, adapt_start=adapt_start,
         adapt_interval=adapt_interval, sd=adapt_sd, surrogate=surrogate,
+        fused_level0=fused_level0, fused_key=fused_key,
     )
     top = len(logpost_batches) - 1
     out = np.empty((K, n_samples, d))
@@ -431,6 +483,12 @@ def ensemble_mlda(
             arrays["adapter_mean"] = sampler.adapter.mean
             arrays["adapter_scatter"] = sampler.adapter._scatter
             meta["adapter_n"] = int(sampler.adapter.n)
+        if sampler._fused_key is not None:
+            # the device key stream rides as its raw key-data manifest —
+            # restoring it replays the identical fused-subchain proposals
+            from repro.core.fleet import CampaignCheckpoint
+
+            arrays["fused_key"] = CampaignCheckpoint.pack_key(sampler._fused_key)
         return arrays, meta
 
     start = 0
@@ -451,6 +509,10 @@ def ensemble_mlda(
             sampler.adapter.mean = np.array(arrays["adapter_mean"])
             sampler.adapter._scatter = np.array(arrays["adapter_scatter"])
             sampler.adapter.n = int(meta["adapter_n"])
+        if "fused_key" in arrays:
+            from repro.core.fleet import CampaignCheckpoint
+
+            sampler._fused_key = CampaignCheckpoint.unpack_key(arrays["fused_key"])
         # exact-stream resume: the generator continues precisely where the
         # snapshot left it, so the resumed trajectory matches the
         # uninterrupted one sample for sample

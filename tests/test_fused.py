@@ -1,0 +1,288 @@
+"""Device-resident fused sampler blocks (`uq.fused`): bit-exactness vs the
+per-step reference, statistical exactness, checkpoint/resume replay,
+mesh-sharded dispatch, MLDA fused subchains and fabric step telemetry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _stat_harness import assert_moments
+
+from repro.core.fabric import EvaluationFabric
+from repro.core.fleet import CampaignCheckpoint
+from repro.uq.fused import (
+    fused_ensemble_mala,
+    fused_ensemble_pcn,
+    fused_ensemble_rwm,
+    gaussian_likelihood_target,
+    gaussian_target,
+    make_fused_rwm_subchain,
+)
+from repro.uq.mcmc import (
+    batched_logpost,
+    ensemble_mala,
+    ensemble_pcn,
+    ensemble_random_walk_metropolis,
+)
+from repro.uq.mlda import ensemble_mlda
+
+MEAN2 = np.array([1.0, -0.5])
+COV2 = np.array([[0.8, 0.3], [0.3, 0.5]])
+
+
+def _x0s(K=6, d=2, seed=3):
+    return np.random.default_rng(seed).normal(size=(K, d))
+
+
+# -- fused block == per-step reference, bit for bit ---------------------------
+
+def test_fused_rwm_bitexact_vs_per_step():
+    lp = gaussian_target(MEAN2, COV2)
+    key = jax.random.key(7)
+    kw = dict(fused_steps=5)
+    r_f = fused_ensemble_rwm(lp, _x0s(), 30, 0.4 * COV2, key, **kw)
+    r_p = fused_ensemble_rwm(lp, _x0s(), 30, 0.4 * COV2, key, per_step=True, **kw)
+    # per_step compiles the SAME scan program with S=1 and pays one dispatch
+    # per step — the streams coincide exactly, not just statistically
+    assert np.array_equal(r_f.samples, r_p.samples)
+    assert np.array_equal(r_f.logposts, r_p.logposts)
+    assert np.array_equal(r_f.accept_rates, r_p.accept_rates)
+    # block accounting: 30 steps at S=5 -> 6 dispatches (+1 init)
+    assert r_f.n_waves == 7 and r_p.n_waves == 31
+
+
+def test_fused_pcn_bitexact_vs_per_step():
+    ll = gaussian_target(MEAN2)  # likelihood-only; prior is the pCN kernel
+    key = jax.random.key(11)
+    r_f = fused_ensemble_pcn(ll, _x0s(), 24, 0.3, key, fused_steps=6)
+    r_p = fused_ensemble_pcn(ll, _x0s(), 24, 0.3, key, fused_steps=6,
+                             per_step=True)
+    assert np.array_equal(r_f.samples, r_p.samples)
+    assert np.array_equal(r_f.accept_rates, r_p.accept_rates)
+
+
+def test_fused_mala_bitexact_vs_per_step_with_adaptation():
+    lp = gaussian_target(MEAN2, COV2)
+    key = jax.random.key(13)
+    kw = dict(fused_steps=5, adapt_steps=15, precond=COV2)
+    r_f = fused_ensemble_mala(lp, _x0s(), 30, 0.6, key, **kw)
+    r_p = fused_ensemble_mala(lp, _x0s(), 30, 0.6, key, per_step=True, **kw)
+    # Robbins-Monro eps rides in the scan carry, so even the adapted
+    # trajectory is reproduced exactly by the per-step dispatch
+    assert np.array_equal(r_f.samples, r_p.samples)
+    assert r_f.final_step_size == r_p.final_step_size
+    assert r_f.n_grad_waves == 7
+
+
+# -- entry-point integration ---------------------------------------------------
+
+def test_entrypoint_fused_matches_direct_runner():
+    lp = gaussian_target(MEAN2, COV2)
+    key = jax.random.key(5)
+    rng = np.random.default_rng(0)
+    got = ensemble_random_walk_metropolis(
+        lp, _x0s(), 20, 0.4 * COV2, rng, fused_steps=5, fused_key=key)
+    want = fused_ensemble_rwm(lp, _x0s(), 20, 0.4 * COV2, key, fused_steps=5)
+    assert np.array_equal(got.samples, want.samples)
+
+
+def test_entrypoint_fused_adaptive_incompatible():
+    lp = gaussian_target(MEAN2)
+    with pytest.raises(ValueError, match="adaptive"):
+        ensemble_random_walk_metropolis(
+            lp, _x0s(), 20, np.eye(2), np.random.default_rng(0),
+            fused_steps=5, adaptive=True)
+
+
+def test_fused_steps_must_divide_n_steps():
+    lp = gaussian_target(MEAN2)
+    with pytest.raises(ValueError, match="multiple"):
+        fused_ensemble_rwm(lp, _x0s(), 21, np.eye(2), jax.random.key(0),
+                           fused_steps=5)
+
+
+# -- statistical exactness over long fused blocks ------------------------------
+
+def test_fused_rwm_recovers_gaussian_moments():
+    d = 3
+    lp = gaussian_target(np.ones(d))
+    x0s = np.random.default_rng(1).normal(size=(8, d))
+    res = ensemble_random_walk_metropolis(
+        lp, x0s, 2000, (2.4**2 / d) * np.eye(d), np.random.default_rng(2),
+        fused_steps=100, fused_key=jax.random.key(42))
+    assert_moments(res.samples, np.ones(d), np.ones(d), label="fused rwm")
+
+
+def test_fused_mala_recovers_gaussian_moments():
+    d = 2
+    lp = gaussian_target(np.ones(d))
+    x0s = np.random.default_rng(1).normal(size=(8, d))
+    res = ensemble_mala(
+        lp, x0s, 1500, 0.9, np.random.default_rng(2),
+        adapt_steps=500, fused_steps=50, fused_key=jax.random.key(9))
+    assert_moments(res.samples, np.ones(d), np.ones(d), label="fused mala")
+
+
+def test_fused_pcn_recovers_gaussian_posterior():
+    # prior N(0, I), likelihood N(x; m, s^2 I) -> posterior N(m/(1+s^2), ...)
+    d, s2 = 2, 0.5
+    m = np.array([0.6, -0.4])
+    ll = gaussian_likelihood_target(lambda xs: xs, m, np.sqrt(s2))
+    x0s = np.random.default_rng(1).normal(size=(8, d))
+    res = ensemble_pcn(
+        ll, None, x0s, 2000, 0.5, np.random.default_rng(2),
+        fused_steps=100, fused_key=jax.random.key(17))
+    post_var = s2 / (1.0 + s2)
+    assert_moments(res.samples, m / (1.0 + s2), post_var * np.ones(d),
+                   label="fused pcn")
+
+
+# -- checkpoint/resume replays the key stream bit-exactly ----------------------
+
+class _DieAfter:
+    """Checkpoint wrapper that kills the campaign after `n` saves."""
+
+    def __init__(self, ckpt, n):
+        self.ckpt, self.n, self.saves = ckpt, n, 0
+
+    def resume(self):
+        return self.ckpt.resume()
+
+    def save(self, step, arrays, meta):
+        self.ckpt.save(step, arrays, meta)
+        self.saves += 1
+        if self.saves >= self.n:
+            raise RuntimeError("simulated preemption")
+
+
+def test_fused_checkpoint_resume_bitexact(tmp_path):
+    lp = gaussian_target(MEAN2, COV2)
+    key = jax.random.key(23)
+    kw = dict(fused_steps=5, adapt_steps=20, precond=COV2)
+    want = fused_ensemble_mala(lp, _x0s(), 40, 0.6, key, **kw)
+
+    ckpt = CampaignCheckpoint(str(tmp_path / "camp"))
+    bomb = _DieAfter(ckpt, 2)
+    with pytest.raises(RuntimeError, match="preemption"):
+        fused_ensemble_mala(lp, _x0s(), 40, 0.6, key, checkpoint=bomb,
+                            checkpoint_every=10, **kw)
+    # resume from the block boundary: identical key stream -> identical tail
+    got = fused_ensemble_mala(
+        lp, _x0s(), 40, 0.6, key,
+        checkpoint=CampaignCheckpoint(str(tmp_path / "camp")),
+        checkpoint_every=10, **kw)
+    assert np.array_equal(got.samples, want.samples)
+    assert np.array_equal(got.logposts, want.logposts)
+    assert got.final_step_size == want.final_step_size
+
+
+def test_key_manifest_roundtrip():
+    key = jax.random.fold_in(jax.random.key(3), 9)
+    data = CampaignCheckpoint.pack_key(key)
+    assert isinstance(data, np.ndarray)  # npy-serializable manifest
+    back = CampaignCheckpoint.unpack_key(data)
+    a = jax.random.normal(key, (4,))
+    b = jax.random.normal(back, (4,))
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- mesh-sharded chain ensembles ---------------------------------------------
+
+def test_fused_sharded_matches_per_step(ctx11):
+    lp = gaussian_target(MEAN2, COV2)
+    key = jax.random.key(29)
+    # K=6 pads to the pow2 bucket (8); padded lanes are masked out of the
+    # accept step, and fused vs per-step stays bit-exact under the mesh
+    r_f = fused_ensemble_rwm(lp, _x0s(K=6), 20, 0.4 * COV2, key,
+                             fused_steps=5, ctx=ctx11)
+    r_p = fused_ensemble_rwm(lp, _x0s(K=6), 20, 0.4 * COV2, key,
+                             fused_steps=5, per_step=True, ctx=ctx11)
+    assert r_f.samples.shape == (6, 20, 2)
+    assert np.array_equal(r_f.samples, r_p.samples)
+    assert np.array_equal(r_f.accept_rates, r_p.accept_rates)
+
+
+# -- MLDA fused coarse subchains ----------------------------------------------
+
+def _mlda_logposts():
+    coarse = gaussian_target(np.ones(2), 1.1 * np.eye(2))
+    fine = gaussian_target(np.ones(2), np.eye(2))
+
+    def lp_coarse(thetas):
+        return np.asarray(coarse(jnp.asarray(np.atleast_2d(thetas))))
+
+    def lp_fine(thetas):
+        return np.asarray(fine(jnp.asarray(np.atleast_2d(thetas))))
+
+    return coarse, [lp_coarse, lp_fine]
+
+
+def test_mlda_fused_subchain_matches_statistics(rng):
+    coarse_traceable, logposts = _mlda_logposts()
+    x0s = rng.normal(size=(6, 2))
+    host = ensemble_mlda(logposts, x0s, 150, [4], 0.5 * np.eye(2),
+                         np.random.default_rng(0))
+    fused = ensemble_mlda(logposts, x0s, 150, [4], 0.5 * np.eye(2),
+                          np.random.default_rng(0),
+                          fused_level0=coarse_traceable,
+                          fused_key=jax.random.key(31))
+    # each coarse subchain is one dispatch instead of `sub` waves
+    assert fused.n_waves < host.n_waves
+    assert abs(fused.accept_rates[-1] - host.accept_rates[-1]) < 0.2
+    m_host = host.samples[:, 50:].mean(axis=(0, 1))
+    m_fused = fused.samples[:, 50:].mean(axis=(0, 1))
+    assert np.all(np.abs(m_fused - m_host) < 0.5)
+
+
+def test_mlda_fused_incompatible_with_adaptive_and_surrogate(rng):
+    coarse_traceable, logposts = _mlda_logposts()
+    x0s = rng.normal(size=(4, 2))
+    with pytest.raises(ValueError, match="fused_level0"):
+        ensemble_mlda(logposts, x0s, 20, [3], np.eye(2),
+                      np.random.default_rng(0),
+                      fused_level0=coarse_traceable, adaptive=True)
+
+
+def test_mlda_fused_checkpoint_roundtrips_key(tmp_path, rng):
+    coarse_traceable, logposts = _mlda_logposts()
+    x0s = rng.normal(size=(4, 2))
+    ckpt = CampaignCheckpoint(str(tmp_path / "camp"))
+    ensemble_mlda(logposts, x0s, 40, [3], 0.5 * np.eye(2),
+                  np.random.default_rng(0), fused_level0=coarse_traceable,
+                  fused_key=jax.random.key(37),
+                  checkpoint=ckpt, checkpoint_every=10)
+    arrays, meta, _ = CampaignCheckpoint(str(tmp_path / "camp")).resume()
+    assert "fused_key" in arrays  # the subchain key stream survives restarts
+
+
+# -- fabric step telemetry -----------------------------------------------------
+
+def test_fabric_steps_per_wave_telemetry():
+    fabric = EvaluationFabric(lambda thetas, cfg=None: np.asarray(thetas).sum(1),
+                              adaptive=False)
+    try:
+        t0 = fabric.telemetry()
+        assert t0["sampler_steps"] == 0 and t0["steps_per_wave"] is None
+        fabric.note_steps(50, waves=1)   # one fused block, S=50
+        fabric.note_steps(1, waves=1)    # one host proposal wave
+        t = fabric.telemetry()
+        assert t["sampler_steps"] == 51
+        assert t["sampler_waves"] == 2
+        assert t["steps_per_wave"] == pytest.approx(25.5)
+    finally:
+        fabric.shutdown()
+
+
+def test_host_sampler_notes_steps_through_batched_logpost():
+    fabric = EvaluationFabric(lambda thetas, cfg=None: np.asarray(thetas).sum(1),
+                              adaptive=False)
+    try:
+        lp = batched_logpost(fabric, lambda y: -0.5 * float(np.ravel(y)[0]) ** 2)
+        x0s = np.random.default_rng(0).normal(size=(4, 2))
+        ensemble_random_walk_metropolis(
+            lp, x0s, 10, 0.3 * np.eye(2), np.random.default_rng(1))
+        t = fabric.telemetry()
+        # host lockstep loop: one step per proposal wave, every step noted
+        assert t["sampler_steps"] == 10
+        assert t["steps_per_wave"] == pytest.approx(1.0)
+    finally:
+        fabric.shutdown()

@@ -12,6 +12,8 @@ from repro.kernels.rmsnorm.ref import rmsnorm_ref
 from repro.kernels.ssd.ops import ssd as ssd_op
 from repro.kernels.ssd.ref import ssd_ref
 from repro.kernels.ssd.ssd import ssd_kernel
+from repro.kernels.swe.ops import swe_step
+from repro.kernels.swe.ref import swe_step_ref
 
 FLASH_CASES = [
     # (B, nq, nkv, S, hd, causal, dtype, tol)
@@ -95,3 +97,74 @@ def test_rmsnorm_vs_ref(case):
     ref = rmsnorm_ref(x, w)
     err = float(jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32))))
     assert err < tol, err
+
+
+# -- SWE Rusanov stencil ------------------------------------------------------
+
+def _swe_state(kind, C=48, N=32):
+    """[cells, batch] shallow-water states exercising the limiter branches."""
+    x = np.linspace(0.0, 1.0, C)[:, None]
+    batch = 1.0 + 0.1 * np.arange(N)[None, :] / N
+    b = 0.1 * np.sin(3 * np.pi * x[:, 0])[:, None]  # [C, 1] bathymetry
+    if kind == "lake_at_rest":
+        h = np.maximum(0.8 - b, 0.0) * np.ones((1, N))
+        hu = np.zeros((C, N))
+    elif kind == "dam_break":
+        h = np.where(x < 0.5, 1.2, 0.4) * batch
+        hu = np.zeros((C, N))
+    elif kind == "dry_bed":
+        # right half below the dry threshold: wet/dry front hits the
+        # desingularized velocity and the hu zeroing branch
+        h = np.where(x < 0.5, 0.6 * batch, 1e-4)
+        hu = np.where(x < 0.5, 0.05 * batch, 0.0)
+    else:  # moving
+        h = 0.7 + 0.2 * np.sin(2 * np.pi * x) * batch
+        hu = 0.1 * np.cos(2 * np.pi * x) * batch
+    return jnp.asarray(h), jnp.asarray(hu), jnp.asarray(b)
+
+
+@pytest.mark.parametrize("kind", ["lake_at_rest", "dam_break", "dry_bed", "moving"])
+def test_swe_step_vs_ref(kind):
+    h, hu, b = _swe_state(kind)
+    out_h, out_hu = swe_step(h, hu, b, dt_dx=0.02, impl="interpret")
+    ref_h, ref_hu = swe_step_ref(h, hu, b, 0.02)
+    np.testing.assert_allclose(np.asarray(out_h), np.asarray(ref_h),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_hu), np.asarray(ref_hu),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_swe_step_bitwise_vs_jitted_ref():
+    # the only kernel/ref delta is XLA's FMA contraction inside jit; the
+    # jitted ref compiles to the same contractions, so this is bit-exact
+    h, hu, b = _swe_state("dam_break")
+    jref = jax.jit(lambda a, q, bb: swe_step_ref(a, q, bb, 0.02))
+    ref_h, ref_hu = jref(h, hu, b)
+    out_h, out_hu = swe_step(h, hu, b, dt_dx=0.02, impl="interpret")
+    assert np.array_equal(np.asarray(out_h), np.asarray(ref_h))
+    assert np.array_equal(np.asarray(out_hu), np.asarray(ref_hu))
+
+
+def test_swe_step_well_balanced_and_dry_invariants():
+    # lake at rest stays at rest (well-balanced hydrostatic reconstruction)
+    h, hu, b = _swe_state("lake_at_rest")
+    out_h, out_hu = swe_step(h, hu, b, dt_dx=0.02, impl="interpret")
+    np.testing.assert_allclose(np.asarray(out_h), np.asarray(h), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_hu), 0.0, atol=1e-6)
+    # dry cells: depth stays non-negative, momentum zeroed below threshold
+    h, hu, b = _swe_state("dry_bed")
+    out_h, out_hu = swe_step(h, hu, b, dt_dx=0.02, impl="interpret")
+    oh, ohu = np.asarray(out_h), np.asarray(out_hu)
+    assert (oh >= 0.0).all()
+    assert (ohu[oh <= 0.05] == 0.0).all()
+
+
+def test_swe_step_odd_batch_tile_clamp():
+    # N=24 forces the pow2 tile clamp (blk 128 -> 8); grid still covers all
+    h, hu, b = _swe_state("moving", N=24)
+    out_h, out_hu = swe_step(h, hu, b, dt_dx=0.02, impl="interpret")
+    ref_h, ref_hu = swe_step_ref(h, hu, b, 0.02)
+    np.testing.assert_allclose(np.asarray(out_h), np.asarray(ref_h),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out_hu), np.asarray(ref_hu),
+                               rtol=1e-4, atol=1e-4)
