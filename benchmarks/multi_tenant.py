@@ -1,0 +1,355 @@
+"""Multi-tenant service benchmark: 8 mixed campaigns on ONE fabric.
+
+Four phases over the same sleepy quadratic model fleet:
+
+1. **sequential baseline** — the 8 campaigns (1 high-priority MCMC,
+   3 normal MCMC, 2 QMC, 2 MLDA) run one after another through a fresh
+   `UQService`; total dispatched points / wall is the reference rate.
+2. **concurrent** — the same 8 campaigns run simultaneously from 8
+   threads through one service. Fair-share scheduling must not tax
+   throughput: the concurrent rate must stay >= `min_ratio` x sequential
+   (it is normally a multiple — concurrent waves overlap on the pool).
+   The two QMC tenants evaluate the same Sobol' points and both declare
+   the config shareable, so the second rides the first's cache rows
+   (`shared_hits > 0`); the MCMC tenants run IDENTICAL chains but stay in
+   private namespaces, so their cross-tenant hits must be ZERO (isolation).
+3. **priority latency** — the high-priority tenant's wave p99 is measured
+   unloaded (alone on a fresh service), then again while 4 low-priority
+   flood tenants saturate every dispatch slot. Strict tier precedence must
+   hold the overloaded p99 within `max_p99_ratio` x the unloaded p99.
+4. **admission + budget** — a quota-capped tenant bursts from 6 threads:
+   some waves shed with `Overloaded` (backpressure, counted), and every
+   wave that was NOT shed must return bit-correct results (zero corrupted
+   or lost). A budget-capped MCMC campaign must stop cleanly mid-run with
+   `terminated="budget"` and a valid truncated chain.
+
+    PYTHONPATH=src python -m benchmarks.multi_tenant [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.fabric import EvaluationFabric, Overloaded, ThreadedBackend
+from repro.core.interface import Model
+from repro.core.pool import ThreadedPool
+from repro.core.service import UQService
+from repro.uq.mcmc import batched_logpost, ensemble_random_walk_metropolis
+from repro.uq.mlda import ensemble_mlda
+from repro.uq.qmc import cub_qmc_sobol
+
+
+class _SleepQuadratic(Model):
+    """out = sum((theta - shift)^2) with a per-call sleep; shift -0.5 on
+    the MLDA coarse level, 1.0 otherwise, so loglik(y) = -y/2 targets the
+    analytic N(1, I) at the fine level."""
+
+    def __init__(self, cost_s: float):
+        super().__init__("forward")
+        self.cost_s = cost_s
+
+    def get_input_sizes(self, c=None):
+        return [2]
+
+    def get_output_sizes(self, c=None):
+        return [1]
+
+    def supports_evaluate(self):
+        return True
+
+    def __call__(self, p, c=None):
+        if self.cost_s:
+            time.sleep(self.cost_s)
+        shift = -0.5 if (c or {}).get("level") == 0 else 1.0
+        th = np.asarray(p[0], float)
+        return [[float(((th - shift) ** 2).sum())]]
+
+
+def _expected(thetas, config=None) -> np.ndarray:
+    shift = -0.5 if (config or {}).get("level") == 0 else 1.0
+    return ((np.atleast_2d(np.asarray(thetas, float)) - shift) ** 2).sum(1)
+
+
+def _mk_service(cost_s: float, width: int = 4, **kw) -> UQService:
+    fabric = EvaluationFabric(
+        ThreadedBackend(ThreadedPool([_SleepQuadratic(cost_s) for _ in range(width)])),
+        cache_size=8192,
+    )
+    kw.setdefault("max_concurrent_waves", width)
+    return UQService(fabric, **kw)
+
+
+def _LOGLIK(y):
+    return -0.5 * float(y[0])
+
+
+def _mcmc_job(camp, n_steps: int, K: int = 8, seed: int = 3):
+    lp = batched_logpost(camp, _LOGLIK)
+    x0s = np.random.default_rng(seed).standard_normal((K, 2)) * 0.3 + 1.0
+    return ensemble_random_walk_metropolis(
+        lp, x0s, n_steps, 0.5 * np.eye(2), np.random.default_rng(seed + 1)
+    )
+
+
+def _qmc_job(camp, n_max: int, seed: int = 11):
+    # abs_tol=0 never converges: the point count is fixed by n_max, so two
+    # tenants with the same seed trace IDENTICAL Sobol' points
+    return cub_qmc_sobol(camp, dim=2, abs_tol=0.0, n_init=32,
+                         n_max=n_max, replications=4, seed=seed)
+
+
+def _mlda_job(camp, n_samples: int, K: int = 8, seed: int = 5):
+    x0s = np.random.default_rng(7).standard_normal((K, 2)) * 0.3 + 1.0
+    return ensemble_mlda(
+        None, x0s, n_samples, [3], 0.7 * np.eye(2),
+        np.random.default_rng(seed), fabric=camp, loglik=_LOGLIK,
+        level_configs=[{"level": 0}, {"level": 1}],
+    )
+
+
+def _campaign_mix(service: UQService, n_steps: int, n_samples: int, n_max: int):
+    """(tenant, thunk) pairs for the 8-campaign mix. MCMC tenants share a
+    SEED (identical traffic) but not a namespace; QMC tenants share both."""
+    share = dict(share_configs=[None])
+    jobs = [
+        ("hi", "high", lambda c: _mcmc_job(c, n_steps, K=32, seed=21), {}),
+        ("mcmc-0", "normal", lambda c: _mcmc_job(c, n_steps, seed=3), {}),
+        ("mcmc-1", "normal", lambda c: _mcmc_job(c, n_steps, seed=3), {}),
+        ("mcmc-2", "normal", lambda c: _mcmc_job(c, n_steps, seed=3), {}),
+        ("qmc-0", "low", lambda c: _qmc_job(c, n_max), share),
+        ("qmc-1", "low", lambda c: _qmc_job(c, n_max), share),
+        ("mlda-0", "normal", lambda c: _mlda_job(c, n_samples), {}),
+        ("mlda-1", "low", lambda c: _mlda_job(c, n_samples), {}),
+    ]
+
+    def run_one(spec):
+        tenant, priority, job, kw = spec
+        with service.open_campaign(tenant, priority=priority, **kw) as camp:
+            return job(camp)
+
+    return jobs, run_one
+
+
+def main(quick: bool = True, smoke: bool = False) -> dict:
+    n_steps = 16 if smoke else (30 if quick else 80)
+    n_samples = 10 if smoke else (16 if quick else 40)
+    n_max = 64 if smoke else 128
+    cost_s = 0.002 if smoke else 0.003
+    # smoke runs on loaded CI runners; quick/full assert the paper-level bar
+    min_ratio = 0.5 if smoke else 0.9
+    max_p99_ratio = 3.0 if smoke else 2.0
+
+    # -- phase 1: the 8 campaigns, one at a time ------------------------------
+    service = _mk_service(cost_s)
+    jobs, run_one = _campaign_mix(service, n_steps, n_samples, n_max)
+    t0 = time.monotonic()
+    try:
+        for spec in jobs:
+            run_one(spec)
+        wall_seq = time.monotonic() - t0
+        seq_points = service.fabric.stats["points"]
+    finally:
+        service.close()
+        service.fabric.shutdown()
+    seq_rate = seq_points / wall_seq
+
+    # -- phase 2: the same 8 campaigns, concurrently --------------------------
+    service = _mk_service(cost_s)
+    jobs, run_one = _campaign_mix(service, n_steps, n_samples, n_max)
+    t0 = time.monotonic()
+    try:
+        with ThreadPoolExecutor(max_workers=len(jobs)) as ex:
+            list(ex.map(run_one, jobs))
+        wall_conc = time.monotonic() - t0
+        conc_points = service.fabric.stats["points"]
+        tel = service.telemetry()
+    finally:
+        service.close()
+        service.fabric.shutdown()
+    conc_rate = conc_points / wall_conc
+    ratio = conc_rate / seq_rate
+    per_tenant = tel["fabric_per_tenant"]
+    shared_hits = per_tenant.get("qmc-1", {}).get("shared_hits_taken", 0) + \
+        per_tenant.get("qmc-0", {}).get("shared_hits_taken", 0)
+    shared_given = sum(v.get("shared_hits_given", 0) for v in per_tenant.values())
+    # isolation: the three normal MCMC tenants traced IDENTICAL chains in
+    # PRIVATE namespaces — a single cross-tenant hit would be a leak
+    mcmc_leaks = sum(
+        per_tenant.get(t, {}).get("shared_hits_taken", 0)
+        for t in ("mcmc-0", "mcmc-1", "mcmc-2")
+    )
+    assert shared_hits > 0, "opt-in QMC tenants shared no cache rows"
+    assert mcmc_leaks == 0, f"private MCMC namespaces leaked {mcmc_leaks} hits"
+
+    # -- phase 3: high-priority p99, unloaded vs overloaded -------------------
+    def _hi_p99(service):
+        with service.open_campaign("hi", priority="high") as camp:
+            lp = batched_logpost(camp, _LOGLIK)
+            x0s = np.random.default_rng(21).standard_normal((32, 2)) * 0.3 + 1.0
+            ensemble_random_walk_metropolis(
+                lp, x0s, n_steps, 0.5 * np.eye(2), np.random.default_rng(22)
+            )
+        return service.telemetry()["tenants"]["hi"]["p99_wave_s"]
+
+    service = _mk_service(cost_s)
+    try:
+        p99_unloaded = _hi_p99(service)
+    finally:
+        service.close()
+        service.fabric.shutdown()
+
+    service = _mk_service(cost_s)
+    stop = threading.Event()
+    shed_flood = [0]
+
+    def flood(i):
+        # low-priority floods keep every dispatch slot hot with SMALL waves;
+        # strict tier precedence should bound the high tenant's extra wait
+        # to one in-flight flood wave's residual
+        rng = np.random.default_rng(100 + i)
+        with service.open_campaign(f"flood-{i}", priority="low") as camp:
+            while not stop.is_set():
+                try:
+                    camp.evaluate_batch(rng.standard_normal((4, 2)))
+                except Overloaded:
+                    shed_flood[0] += 1
+                    time.sleep(cost_s)
+
+    flood_threads = [threading.Thread(target=flood, args=(i,), daemon=True)
+                     for i in range(4)]
+    try:
+        for t in flood_threads:
+            t.start()
+        time.sleep(10 * cost_s)  # let the floods saturate the slots first
+        p99_overloaded = _hi_p99(service)
+    finally:
+        stop.set()
+        for t in flood_threads:
+            t.join(timeout=10)
+
+    p99_ratio = p99_overloaded / max(p99_unloaded, 1e-9)
+
+    # -- phase 4a: admission control sheds, survivors stay correct ------------
+    sheds = [0]
+    corrupt = [0]
+    ok_waves = [0]
+    with service.open_campaign("burst", priority="normal",
+                               max_inflight_points=12) as camp:
+        def burst(i):
+            rng = np.random.default_rng(200 + i)
+            for _ in range(6):
+                thetas = rng.standard_normal((8, 2))
+                try:
+                    ys = camp.evaluate_batch(thetas)
+                except Overloaded:
+                    sheds[0] += 1
+                    continue
+                ok_waves[0] += 1
+                if not np.allclose(np.asarray(ys).ravel(), _expected(thetas)):
+                    corrupt[0] += 1
+
+        with ThreadPoolExecutor(max_workers=6) as ex:
+            list(ex.map(burst, range(6)))
+    assert sheds[0] > 0, "the burst never tripped admission control"
+    assert corrupt[0] == 0, f"{corrupt[0]} admitted waves returned wrong data"
+
+    # -- phase 4b: budget runs dry -> clean truncated chain -------------------
+    K, budget_steps = 8, 10
+    with service.open_campaign("budget-demo", budget=K * budget_steps) as camp:
+        res = _mcmc_job(camp, 4 * budget_steps, K=K)
+        budget_left = camp.budget_remaining
+    service_tel = service.telemetry()
+    service.close()
+    service.fabric.shutdown()
+    assert res.terminated == "budget", "budgeted campaign did not stop cleanly"
+    assert res.samples.shape[1] < 4 * budget_steps
+    assert np.isfinite(res.samples).all()
+
+    doc = {
+        "schema": "multi-tenant-v1",
+        "created_unix": time.time(),
+        "mode": "smoke" if smoke else ("quick" if quick else "full"),
+        "throughput": {
+            "sequential_evals_per_sec": round(seq_rate, 1),
+            "concurrent_evals_per_sec": round(conc_rate, 1),
+            "ratio": round(ratio, 3),
+            "min_ratio": min_ratio,
+            "sequential_wall_s": round(wall_seq, 3),
+            "concurrent_wall_s": round(wall_conc, 3),
+            "points": conc_points,
+        },
+        "cache": {
+            "shared_hits_taken": int(shared_hits),
+            "shared_hits_given": int(shared_given),
+            "private_mcmc_leaks": int(mcmc_leaks),
+        },
+        "priority": {
+            "p99_unloaded_s": round(p99_unloaded, 5),
+            "p99_overloaded_s": round(p99_overloaded, 5),
+            "p99_ratio": round(p99_ratio, 3),
+            "max_p99_ratio": max_p99_ratio,
+            "flood_sheds": shed_flood[0],
+        },
+        "admission": {
+            "sheds": sheds[0],
+            "ok_waves": ok_waves[0],
+            "corrupted": corrupt[0],
+        },
+        "budget": {
+            "budget_points": K * budget_steps,
+            "steps_completed": int(res.samples.shape[1]),
+            "terminated": res.terminated,
+            "budget_remaining": budget_left,
+        },
+        "scheduler": {
+            t: {k: v for k, v in d.items()
+                if k in ("priority", "granted_waves", "shed", "aged_grants")}
+            for t, d in service_tel["tenants"].items()
+        },
+    }
+    print(
+        f"multi-tenant: concurrent {conc_rate:.0f}/s vs sequential "
+        f"{seq_rate:.0f}/s (ratio {ratio:.2f}, floor {min_ratio}); "
+        f"hi p99 {p99_overloaded * 1e3:.1f}ms overloaded vs "
+        f"{p99_unloaded * 1e3:.1f}ms unloaded (ratio {p99_ratio:.2f}, "
+        f"cap {max_p99_ratio}); {shared_hits} shared hits, "
+        f"{sheds[0]} admission sheds (0 corrupted), budget stop at step "
+        f"{res.samples.shape[1]}"
+    )
+    return doc
+
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + loose floors for CI")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the benchmark telemetry document")
+    args = ap.parse_args()
+    doc = main(smoke=args.smoke)
+    if args.json:
+        # write BEFORE the gate checks: on failure the artifact is the
+        # investigation's starting point
+        Path(args.json).write_text(json.dumps(doc, indent=1))
+        print(f"telemetry -> {args.json}")
+    thr, pri = doc["throughput"], doc["priority"]
+    if thr["ratio"] < thr["min_ratio"]:
+        raise SystemExit(
+            f"concurrent throughput ratio {thr['ratio']} below the floor "
+            f"{thr['min_ratio']}: fair-share scheduling is taxing throughput"
+        )
+    if pri["p99_ratio"] > pri["max_p99_ratio"]:
+        raise SystemExit(
+            f"high-priority p99 blew up {pri['p99_ratio']}x under overload "
+            f"(cap {pri['max_p99_ratio']}x): tier precedence is not holding"
+        )
+
+
+if __name__ == "__main__":
+    _cli()

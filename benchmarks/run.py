@@ -91,6 +91,16 @@ def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
             f"stencil_parity_err={out['swe_stencil']['max_abs_err_vs_jitted_ref']:.1e}"
         )
         rate = ts["fused_steps_per_sec"] * out["chains"]
+    elif name.startswith("multi_tenant"):
+        thr, pri = out["throughput"], out["priority"]
+        derived = (
+            f"throughput_ratio={thr['ratio']:.2f};"
+            f"hi_p99_ratio={pri['p99_ratio']:.2f};"
+            f"shared_hits={out['cache']['shared_hits_taken']};"
+            f"sheds={out['admission']['sheds']};"
+            f"corrupted={out['admission']['corrupted']}"
+        )
+        rate = thr["concurrent_evals_per_sec"]
     elif name.startswith("elastic_fleet"):
         ch, ck = out["chaos"], out["checkpoint"]
         derived = (
@@ -124,6 +134,7 @@ def main() -> None:
         fused_sampler,
         grad_mcmc,
         mlda_tsunami,
+        multi_tenant,
         qmc_defects,
         roofline,
         sparse_grid_l2sea,
@@ -141,6 +152,7 @@ def main() -> None:
         ("fused_sampler", fused_sampler.main),
         ("surrogate_da_sec4.3", surrogate_da.main),
         ("elastic_fleet", elastic_fleet.main),
+        ("multi_tenant", multi_tenant.main),
         ("roofline", roofline.main),
     ]
     for name, fn in benches:

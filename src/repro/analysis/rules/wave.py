@@ -3,7 +3,8 @@ the hot dispatch/sampler modules.
 
 The whole fabric economics rest on batched waves; a Python loop that calls
 the model once per theta inside `core/fabric.py`, `core/pool.py`,
-`uq/mcmc.py` or `uq/mlda.py` silently shatters a wave into N dispatches.
+`core/service.py`, `uq/mcmc.py` or `uq/mlda.py` silently shatters a wave
+into N dispatches.
 The per-point fallback belongs ONLY in the `Model` base class
 (`core/interface.py`), which is deliberately outside this rule's scope.
 
@@ -21,6 +22,7 @@ from repro.analysis.common import FileCtx, Finding, ScopedVisitor, dotted
 HOT_MODULES = (
     "core/fabric.py",
     "core/pool.py",
+    "core/service.py",
     "uq/fused.py",
     "uq/mcmc.py",
     "uq/mlda.py",

@@ -16,5 +16,7 @@ from repro.core.fleet import (  # noqa: F401
     FaultInjector,
     FleetManager,
 )
+from repro.core.service import Campaign, UQService  # noqa: F401
+from repro.core.fabric import BudgetExhausted, Overloaded  # noqa: F401
 from repro.core.scheduler import BatchingExecutor  # noqa: F401
 from repro.core.hierarchy import MultilevelModel  # noqa: F401

@@ -26,11 +26,17 @@ from repro.core.interface import Capabilities, Model
 from repro.core.protocol import config_key, error_body, split_blocks
 
 
-def _post(url: str, path: str, body: dict, timeout: float = 60.0) -> dict:
+def _post(url: str, path: str, body: dict, timeout: float = 60.0,
+          tenant: str | None = None) -> dict:
+    headers = {"Content-Type": "application/json"}
+    if tenant is not None:
+        # multi-tenant service tier: the server accounts the request (and
+        # its point count) to this tenant and serves the totals on /Tenants
+        headers["X-UQ-Tenant"] = str(tenant)
     req = urllib.request.Request(
         url.rstrip("/") + path,
         data=json.dumps(body).encode(),
-        headers={"Content-Type": "application/json"},
+        headers=headers,
         method="POST",
     )
     try:
@@ -77,9 +83,11 @@ def register_servers(
     name: str = "forward",
     *,
     timeout: float = 600.0,
+    probe_timeout_s: float = 5.0,
     require_all: bool = False,
     return_dead: bool = False,
     allow_empty: bool = False,
+    tenant: str | None = None,
 ):
     """Probe each server's `/Health` and enroll the live ones as independent
     fabric backends — ONE `HTTPBackend` per server, so a `FabricRouter` (or
@@ -96,12 +104,18 @@ def register_servers(
     dead list and enroll late arrivals via `fabric.add_backend`.
 
     Registering zero live servers raises unless `allow_empty=True` (an
-    elastic fleet may legitimately start empty and scale up)."""
+    elastic fleet may legitimately start empty and scale up).
+
+    `probe_timeout_s` bounds the `/Health` probe (the old hard-coded 5 s
+    default): slow-cold-start backends — a JAX server still compiling its
+    batched program — need a longer probe window or they are misclassified
+    dead at enrollment. `tenant` stamps every request the enrolled clients
+    issue with the `X-UQ-Tenant` header."""
     from repro.core.fabric import HTTPBackend
 
     backends, dead = [], []
     for url in urls:
-        doc = probe_health(url)
+        doc = probe_health(url, timeout=probe_timeout_s)
         if (
             doc is None
             or doc.get("status") != "ok"
@@ -111,7 +125,9 @@ def register_servers(
         ):
             dead.append(url)
             continue
-        backends.append(HTTPBackend([HTTPModel(url, name, timeout=timeout)]))
+        backends.append(
+            HTTPBackend([HTTPModel(url, name, timeout=timeout, tenant=tenant)])
+        )
     if dead and require_all:
         raise RuntimeError(f"unhealthy servers: {dead}")
     if not backends and not allow_empty:
@@ -122,10 +138,14 @@ def register_servers(
 
 
 class HTTPModel(Model):
-    def __init__(self, url: str, name: str = "forward", timeout: float = 600.0):
+    def __init__(self, url: str, name: str = "forward", timeout: float = 600.0,
+                 tenant: str | None = None):
         super().__init__(name)
         self.url = url
         self.timeout = timeout
+        # tenant identity on the wire: every request carries X-UQ-Tenant so
+        # shared servers account traffic per tenant (GET /Tenants)
+        self.tenant = tenant
         self.round_trips = 0  # HTTP requests issued (telemetry)
         self._sizes_cache: dict = {}  # config_key -> input sizes (static per config)
         info = self._rpc("/ModelInfo", {"name": name}, timeout=10.0)
@@ -145,7 +165,8 @@ class HTTPModel(Model):
 
     def _rpc(self, path: str, body: dict, timeout: float | None = None) -> dict:
         self.round_trips += 1
-        return _post(self.url, path, body, timeout or self.timeout)
+        return _post(self.url, path, body, timeout or self.timeout,
+                     tenant=self.tenant)
 
     def get_input_sizes(self, config=None):
         # cached per config: sizes are static, and the per-point fallback

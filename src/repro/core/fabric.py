@@ -80,6 +80,44 @@ from repro.core.protocol import config_key, split_blocks
 #: family — it needs no wire capability of its own)
 WAVE_OPS = ("evaluate", "gradient", "apply_jacobian", "value_and_gradient")
 
+#: per-tenant accounting bucket layout (`stats["per_tenant"]`): integer
+#: counters plus backend-seconds. `shared_hits_taken` counts cache rows a
+#: tenant read that ANOTHER tenant paid for (opt-in shared namespace only);
+#: `shared_hits_given` is the payer's mirror of the same event.
+_TENANT_COUNTERS = (
+    "waves", "points", "cache_hits", "cache_misses", "coalesced",
+    "shared_hits_taken", "shared_hits_given",
+)
+
+
+class Overloaded(RuntimeError):
+    """Admission control rejected the request: the tenant's queue or
+    inflight quota (or the service-wide queue cap) is full. Explicit
+    backpressure — callers back off or shed work instead of piling latency
+    onto every other tenant."""
+
+    def __init__(self, tenant: str, reason: str):
+        super().__init__(f"tenant {tenant!r} overloaded: {reason}")
+        self.tenant = tenant
+        self.reason = reason
+
+
+class BudgetExhausted(RuntimeError):
+    """A campaign's evaluation budget is spent. Samplers catch this, land a
+    final checkpoint at the current step boundary, and return their partial
+    result with ``terminated="budget"`` — a budget stop is a clean stop,
+    never a corrupted one."""
+
+    def __init__(self, campaign_id: str, budget: int, requested: int, charged: int):
+        super().__init__(
+            f"campaign {campaign_id!r} budget exhausted: "
+            f"{charged}/{budget} points charged, {requested} more requested"
+        )
+        self.campaign_id = campaign_id
+        self.budget = budget
+        self.requested = requested
+        self.charged = charged
+
 
 # ---------------------------------------------------------------------------
 # Backends
@@ -1175,9 +1213,19 @@ class EvaluationFabric:
         self.adaptive = adaptive
         self.cache_size = int(cache_size)
         self._cache: OrderedDict[tuple, np.ndarray] = OrderedDict()
+        # who paid for each cached row (None = anonymous / single-tenant
+        # traffic): a hit served to a DIFFERENT tenant is a shared hit,
+        # accounted to both sides (see _note_hit_owner)
+        self._cache_owner: dict[tuple, str | None] = {}
         self._inflight: dict[tuple, Future] = {}
+        # who is paying for each in-flight wave entry: a coalesce onto
+        # ANOTHER tenant's in-flight evaluation is the same economics as a
+        # shared cache hit (the ride starts before the row lands)
+        self._inflight_owner: dict[tuple, str | None] = {}
         self._lock = named_condition("fabric")
-        self._pending: list[tuple[np.ndarray, dict | None, Future, tuple]] = []
+        self._pending: list[
+            tuple[np.ndarray, dict | None, Future, tuple, str | None]
+        ] = []
         self._stop = False
         self._wave_latency_ewma: float | None = None
         self._labels: dict[tuple, str] = {}
@@ -1213,6 +1261,10 @@ class EvaluationFabric:
             # per-capability wave/point split — gradient-sampler benchmarks
             # read their wave economics here
             "per_capability": {},
+            # per-tenant cost accounting (see `_tenant_bump` / `UQService`):
+            # waves, points, cache hits, shared hits given/taken, and
+            # backend-seconds attributed from measured dispatch walls
+            "per_tenant": {},
         }
         self._thread = threading.Thread(target=self._collector, daemon=True)
         self._thread.start()
@@ -1248,6 +1300,61 @@ class EvaluationFabric:
         )
         for k, v in inc.items():
             bucket[k] += v
+
+    def _tenant_bump(self, tenant, **inc):  # caller holds the lock
+        if tenant is None:
+            return
+        bucket = self.stats["per_tenant"].setdefault(
+            tenant, {**{k: 0 for k in _TENANT_COUNTERS}, "backend_s": 0.0}
+        )
+        for k, v in inc.items():
+            bucket[k] = bucket.get(k, 0) + v
+
+    def _note_hit_owner(self, key, tenant):  # caller holds the lock
+        """Cross-tenant hit accounting: a cache row (or in-flight wave ride)
+        served to a tenant other than the one paying for it is a SHARED hit
+        — possible only in the opt-in shared namespace (private namespaces
+        cannot collide)."""
+        owner = (self._cache_owner[key] if key in self._cache_owner
+                 else self._inflight_owner.get(key))
+        if tenant == owner or (tenant is None and owner is None):
+            return
+        self._tenant_bump(tenant, shared_hits_taken=1)
+        self._tenant_bump(owner, shared_hits_given=1)
+
+    def note_tenant(self, tenant: str, **inc) -> None:
+        """Fold service-layer per-tenant counters (sheds, budget stops,
+        fused device steps, scheduler cost-seconds) into the same telemetry
+        bucket the wave path feeds — `telemetry()["per_tenant"]` stays the
+        ONE place per-tenant economics surface."""
+        with self._lock:
+            self._tenant_bump(tenant, **inc)
+
+    def reset_stats(self) -> None:
+        """Zero the telemetry counters ATOMICALLY and COMPLETELY: every
+        top-level counter, the steps-per-wave inputs, and the nested
+        per-label / per-capability / per-tenant buckets reset under ONE
+        acquisition of the fabric lock — no wave can interleave a bump
+        between a half-reset top level and stale nested buckets. Registered
+        labels survive (zeroed) so per-level attribution keeps working
+        after a reset; tuning state (max_batch, linger, wave-latency EWMA)
+        is NOT stats and is preserved. Cascades to a routed backend's own
+        `reset_stats` (which keeps its learned EWMA) outside the fabric
+        lock — the router has its own."""
+        with self._lock:
+            for k, v in self.stats.items():
+                if isinstance(v, dict):
+                    continue
+                self.stats[k] = 0.0 if isinstance(v, float) else 0
+            self.stats["per_label"] = {
+                label: {"points": 0, "waves": 0, "cache_hits": 0, "cache_misses": 0}
+                for label in self.stats["per_label"]
+            }
+            self.stats["per_capability"] = {}
+            self.stats["per_tenant"] = {}
+        reset = getattr(self.backend, "reset_stats", None)
+        if callable(reset):
+            reset()
 
     def _require_router(self, what: str) -> FabricRouter:
         if not isinstance(self.backend, FabricRouter):
@@ -1343,11 +1450,17 @@ class EvaluationFabric:
 
     # -- cache --------------------------------------------------------------
     def _key(self, theta: np.ndarray, config: dict | None, op: str = "evaluate",
-             extra: np.ndarray | None = None) -> tuple:
+             extra: np.ndarray | None = None, ns: str | None = None) -> tuple:
         """Cache key: the operation NAMESPACES the entry (per-capability
         isolation), and derivative entries carry their second operand —
-        gradient(theta, sens) and gradient(theta, sens') are distinct."""
+        gradient(theta, sens) and gradient(theta, sens') are distinct.
+        `ns` is the TENANT namespace: None is the shared pool (single-tenant
+        traffic and campaigns that opted into cross-tenant sharing); a
+        tenant name makes the key private — two tenants evaluating the same
+        (theta, config, op) can never collide unless both declared the
+        config shareable."""
         return (
+            ns,
             op,
             theta.tobytes(),
             theta.size,
@@ -1363,22 +1476,27 @@ class EvaluationFabric:
             self._cache.move_to_end(key)
         return hit
 
-    def _cache_put(self, key, value):  # caller holds the lock
+    def _cache_put(self, key, value, tenant: str | None = None):  # caller holds the lock
         if not self.cache_size:
             return
         # defensive copy: result arrays are handed to callers, who may
         # mutate them in place — the cached value must not alias them
         self._cache[key] = np.array(value)
+        self._cache_owner[key] = tenant
         self._cache.move_to_end(key)
         while len(self._cache) > self.cache_size:
-            self._cache.popitem(last=False)
+            evicted, _ = self._cache.popitem(last=False)
+            self._cache_owner.pop(evicted, None)
 
     # -- per-point API -------------------------------------------------------
-    def submit(self, theta, config: dict | None = None) -> Future:
+    def submit(self, theta, config: dict | None = None, *,
+               tenant: str | None = None, namespace: str | None = None) -> Future:
         """Single-point evaluation future; transparently batched into waves,
-        deduped against the cache and identical in-flight requests."""
+        deduped against the cache and identical in-flight requests.
+        `tenant` attributes the traffic in `per_tenant` telemetry;
+        `namespace` selects the cache namespace (None = shared pool)."""
         theta = np.asarray(theta, float).ravel()
-        key = self._key(theta, config)
+        key = self._key(theta, config, ns=namespace)
         with self._lock:
             if self._stop:
                 raise RuntimeError("fabric is shut down")
@@ -1387,19 +1505,25 @@ class EvaluationFabric:
                 self.stats["cache_hits"] += 1
                 self._label_bump(config, cache_hits=1)
                 self._capability_bump("evaluate", cache_hits=1)
+                self._tenant_bump(tenant, cache_hits=1)
+                self._note_hit_owner(key, tenant)
                 fut: Future = Future()
                 fut.set_result(hit.copy())
                 return fut
             inflight = self._inflight.get(key)
             if inflight is not None:
                 self.stats["coalesced"] += 1
+                self._tenant_bump(tenant, coalesced=1)
+                self._note_hit_owner(key, tenant)
                 return _derived_future(inflight)
             self.stats["cache_misses"] += 1
             self._label_bump(config, cache_misses=1)
             self._capability_bump("evaluate", cache_misses=1)
+            self._tenant_bump(tenant, cache_misses=1)
             fut = Future()
             self._inflight[key] = fut
-            self._pending.append((theta, config, fut, key))
+            self._inflight_owner[key] = tenant
+            self._pending.append((theta, config, fut, key, tenant))
             self._lock.notify()
         return fut
 
@@ -1413,13 +1537,15 @@ class EvaluationFabric:
         return f
 
     # -- batched API ---------------------------------------------------------
-    def evaluate_batch(self, thetas, config: dict | None = None) -> np.ndarray:
+    def evaluate_batch(self, thetas, config: dict | None = None, *,
+                       tenant: str | None = None,
+                       namespace: str | None = None) -> np.ndarray:
         """[N, n] -> [N, m] in ONE backend dispatch (bypasses the collector —
         an explicit batch is already a wave), deduping repeated rows and
-        cache hits first."""
+        cache hits first. `tenant`/`namespace` as in `submit`."""
         thetas = np.atleast_2d(np.asarray(thetas, float))
         N = len(thetas)
-        keys = [self._key(t, config) for t in thetas]
+        keys = [self._key(t, config, ns=namespace) for t in thetas]
         rows: list[np.ndarray | None] = [None] * N
         miss_order: list[tuple] = []
         miss_rows: dict[tuple, int] = {}
@@ -1434,27 +1560,35 @@ class EvaluationFabric:
                     self.stats["cache_hits"] += 1
                     self._label_bump(config, cache_hits=1)
                     self._capability_bump("evaluate", cache_hits=1)
+                    self._tenant_bump(tenant, cache_hits=1)
+                    self._note_hit_owner(key, tenant)
                     rows[i] = hit
                     continue
                 if key in miss_rows:
                     self.stats["cache_hits"] += 1  # intra-batch duplicate
                     self._label_bump(config, cache_hits=1)
                     self._capability_bump("evaluate", cache_hits=1)
+                    self._tenant_bump(tenant, cache_hits=1)
                     continue
                 inflight = self._inflight.get(key)
                 if inflight is not None:
                     self.stats["coalesced"] += 1
+                    self._tenant_bump(tenant, coalesced=1)
+                    self._note_hit_owner(key, tenant)
                     wait_futs[key] = inflight
                     continue
                 self.stats["cache_misses"] += 1
                 self._label_bump(config, cache_misses=1)
                 self._capability_bump("evaluate", cache_misses=1)
+                self._tenant_bump(tenant, cache_misses=1)
                 miss_rows[key] = len(miss_order)
                 miss_order.append(key)
                 miss_thetas.append(thetas[i])
                 self._inflight[key] = Future()
+                self._inflight_owner[key] = tenant
         outs = None
         if miss_order:
+            t0 = time.monotonic()
             try:
                 outs = np.atleast_2d(
                     np.asarray(self.backend.evaluate(np.stack(miss_thetas), config))
@@ -1465,9 +1599,11 @@ class EvaluationFabric:
                 with self._lock:
                     for k in miss_order:
                         fut = self._inflight.pop(k, None)
+                        self._inflight_owner.pop(k, None)
                         if fut is not None and not fut.done():
                             fut.set_exception(e)
                 raise
+            wall = time.monotonic() - t0
             # tap snapshot BEFORE futures resolve (same discipline as the
             # collector path): no waiter mutation can reach the observers
             tap_outs = np.array(outs)
@@ -1478,9 +1614,12 @@ class EvaluationFabric:
                 self.stats["fill_sum"] += 1.0
                 self._label_bump(config, points=len(miss_order), waves=1)
                 self._capability_bump("evaluate", points=len(miss_order), waves=1)
+                self._tenant_bump(tenant, points=len(miss_order), waves=1,
+                                  backend_s=wall)
                 for k, out in zip(miss_order, outs):
-                    self._cache_put(k, out)
+                    self._cache_put(k, out, tenant)
                     fut = self._inflight.pop(k, None)
+                    self._inflight_owner.pop(k, None)
                     if fut is not None and not fut.done():
                         fut.set_result(out)
             self._notify_observers(
@@ -1498,19 +1637,27 @@ class EvaluationFabric:
     __call__ = evaluate_batch
 
     # -- batched derivative API ----------------------------------------------
-    def gradient_batch(self, thetas, senss, config: dict | None = None) -> np.ndarray:
+    def gradient_batch(self, thetas, senss, config: dict | None = None, *,
+                       tenant: str | None = None,
+                       namespace: str | None = None) -> np.ndarray:
         """Batched VJP wave: [N, n] x [N, m] -> [N, n] routed only to
         gradient-capable backends (raises `UnsupportedCapability` when the
         cluster has none). Cached in the per-capability namespace, keyed on
         (theta, sens, config)."""
-        return self._derivative_wave("gradient", thetas, senss, config)
+        return self._derivative_wave("gradient", thetas, senss, config,
+                                     tenant=tenant, namespace=namespace)
 
-    def apply_jacobian_batch(self, thetas, vecs, config: dict | None = None) -> np.ndarray:
+    def apply_jacobian_batch(self, thetas, vecs, config: dict | None = None, *,
+                             tenant: str | None = None,
+                             namespace: str | None = None) -> np.ndarray:
         """Batched JVP wave: [N, n] x [N, n] -> [N, m], capability-routed
         and cached like `gradient_batch`."""
-        return self._derivative_wave("apply_jacobian", thetas, vecs, config)
+        return self._derivative_wave("apply_jacobian", thetas, vecs, config,
+                                     tenant=tenant, namespace=namespace)
 
-    def _derivative_wave(self, op: str, thetas, extras, config) -> np.ndarray:
+    def _derivative_wave(self, op: str, thetas, extras, config, *,
+                         tenant: str | None = None,
+                         namespace: str | None = None) -> np.ndarray:
         thetas = np.atleast_2d(np.asarray(thetas, float))
         extras = np.atleast_2d(np.asarray(extras, float))
         if len(extras) != len(thetas):
@@ -1523,7 +1670,8 @@ class EvaluationFabric:
                 f"(advertised: {sorted(self.capabilities().names())})"
             )
         N = len(thetas)
-        keys = [self._key(t, config, op, e) for t, e in zip(thetas, extras)]
+        keys = [self._key(t, config, op, e, ns=namespace)
+                for t, e in zip(thetas, extras)]
         rows: list[np.ndarray | None] = [None] * N
         miss_order: list[tuple] = []
         miss_rows: dict[tuple, int] = {}
@@ -1537,32 +1685,40 @@ class EvaluationFabric:
                     self.stats["cache_hits"] += 1
                     self._label_bump(config, cache_hits=1)
                     self._capability_bump(op, cache_hits=1)
+                    self._tenant_bump(tenant, cache_hits=1)
+                    self._note_hit_owner(key, tenant)
                     rows[i] = hit
                     continue
                 if key in miss_rows:
                     self.stats["cache_hits"] += 1  # intra-batch duplicate
                     self._label_bump(config, cache_hits=1)
                     self._capability_bump(op, cache_hits=1)
+                    self._tenant_bump(tenant, cache_hits=1)
                     continue
                 self.stats["cache_misses"] += 1
                 self._label_bump(config, cache_misses=1)
                 self._capability_bump(op, cache_misses=1)
+                self._tenant_bump(tenant, cache_misses=1)
                 miss_rows[key] = len(miss_order)
                 miss_order.append(key)
                 miss_idx.append(i)
         outs = None
         if miss_order:
+            t0 = time.monotonic()
             outs = np.atleast_2d(np.asarray(self.backend.dispatch(
                 op, thetas[miss_idx], extras[miss_idx], config
             ), float))
+            wall = time.monotonic() - t0
             with self._lock:
                 self.stats["waves"] += 1
                 self.stats["points"] += len(miss_order)
                 self.stats["fill_sum"] += 1.0
                 self._label_bump(config, points=len(miss_order), waves=1)
                 self._capability_bump(op, points=len(miss_order), waves=1)
+                self._tenant_bump(tenant, points=len(miss_order), waves=1,
+                                  backend_s=wall)
                 for k, out in zip(miss_order, outs):
-                    self._cache_put(k, out)
+                    self._cache_put(k, out, tenant)
             self._notify_observers(op, thetas[miss_idx], outs, config)
         for i, key in enumerate(keys):
             if rows[i] is None:
@@ -1570,7 +1726,8 @@ class EvaluationFabric:
         return np.stack([np.asarray(r).ravel() for r in rows])
 
     def value_and_gradient_batch(
-        self, thetas, sens_fn: Callable, config: dict | None = None
+        self, thetas, sens_fn: Callable, config: dict | None = None, *,
+        tenant: str | None = None, namespace: str | None = None,
     ) -> tuple[np.ndarray, np.ndarray]:
         """Fused forward + VJP wave: (ys [N, m], grads [N, n]) with
         grads[k] = sens_fn(ys[k])^T J(thetas[k]).
@@ -1584,9 +1741,11 @@ class EvaluationFabric:
         cache-served through the two-wave path when it matters."""
         thetas = np.atleast_2d(np.asarray(thetas, float))
         if getattr(self.backend, "fused_value_grad", False):
+            t0 = time.monotonic()
             ys, grads = self.backend.dispatch(
                 "value_and_gradient", thetas, sens_fn, config
             )
+            wall = time.monotonic() - t0
             ys = np.atleast_2d(np.asarray(ys, float))
             grads = np.atleast_2d(np.asarray(grads, float))
             with self._lock:
@@ -1599,6 +1758,8 @@ class EvaluationFabric:
                 self._capability_bump(
                     "value_and_gradient", points=len(thetas), waves=1
                 )
+                self._tenant_bump(tenant, points=len(thetas), waves=1,
+                                  backend_s=wall)
             # fused waves carry fresh forward values too — observers that
             # train on (theta, y) pairs filter on the op themselves
             self._notify_observers("value_and_gradient", thetas, ys, config)
@@ -1609,9 +1770,11 @@ class EvaluationFabric:
                 "cannot serve value_and_gradient waves "
                 f"(advertised: {sorted(self.capabilities().names())})"
             )
-        ys = self.evaluate_batch(thetas, config)
+        ys = self.evaluate_batch(thetas, config, tenant=tenant,
+                                 namespace=namespace)
         senss = np.stack([np.asarray(sens_fn(y), float).ravel() for y in ys])
-        return ys, self.gradient_batch(thetas, senss, config)
+        return ys, self.gradient_batch(thetas, senss, config, tenant=tenant,
+                                       namespace=namespace)
 
     # -- collector (submit path) --------------------------------------------
     def _collector(self):
@@ -1638,24 +1801,39 @@ class EvaluationFabric:
             t0 = time.monotonic()
             for items in groups.values():
                 stack = np.stack([it[0] for it in items])
+                t_grp = time.monotonic()
                 try:
                     outs = np.atleast_2d(
                         np.asarray(self.backend.evaluate(stack, items[0][1]))
                     )
                     if outs.shape[0] != len(items):
                         outs = outs.T
+                    grp_wall = time.monotonic() - t_grp
                     # tap snapshot BEFORE futures resolve: the original
                     # submitter gets the raw rows and may mutate its
                     # result in place the instant set_result runs
                     tap_outs = np.array(outs[: len(items)])
+                    # per-tenant share of this group: a mixed collector wave
+                    # charges each tenant its point count and a proportional
+                    # slice of the measured dispatch wall
+                    tenant_points: dict[str, int] = {}
+                    for it in items:
+                        if it[4] is not None:
+                            tenant_points[it[4]] = tenant_points.get(it[4], 0) + 1
                     with self._lock:
                         self._label_bump(items[0][1], points=len(items), waves=1)
                         self._capability_bump(
                             "evaluate", points=len(items), waves=1
                         )
-                        for (_, _, fut, key), out in zip(items, outs):
-                            self._cache_put(key, out)
+                        for tname, n_t in tenant_points.items():
+                            self._tenant_bump(
+                                tname, points=n_t, waves=1,
+                                backend_s=grp_wall * n_t / len(items),
+                            )
+                        for (_, _, fut, key, tname), out in zip(items, outs):
+                            self._cache_put(key, out, tname)
                             self._inflight.pop(key, None)
+                            self._inflight_owner.pop(key, None)
                             if not fut.done():
                                 fut.set_result(out)
                     self._notify_observers(
@@ -1663,8 +1841,9 @@ class EvaluationFabric:
                     )
                 except Exception as e:  # noqa: BLE001
                     with self._lock:
-                        for _, _, fut, key in items:
+                        for _, _, fut, key, _tname in items:
                             self._inflight.pop(key, None)
+                            self._inflight_owner.pop(key, None)
                             if not fut.done():
                                 fut.set_exception(e)
             with self._lock:
@@ -1695,6 +1874,7 @@ class EvaluationFabric:
         s = dict(self.stats)
         s["per_label"] = {k: dict(v) for k, v in s["per_label"].items()}
         s["per_capability"] = {k: dict(v) for k, v in s["per_capability"].items()}
+        s["per_tenant"] = {k: dict(v) for k, v in s["per_tenant"].items()}
         looked_up = s["cache_hits"] + s["cache_misses"]
         s["cache_hit_rate"] = s["cache_hits"] / looked_up if looked_up else 0.0
         scr = s["surrogate_screened"]

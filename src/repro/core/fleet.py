@@ -183,11 +183,11 @@ class FaultInjector(FabricBackend):
 # ---------------------------------------------------------------------------
 
 
-def _probe_backend(backend) -> bool:
+def _probe_backend(backend, probe_timeout_s: float = 5.0) -> bool:
     """Health-probe a router member for probation re-entry: injectors and
     pools report liveness directly; HTTP backends get a `/Health` GET per
-    server; anything else is assumed healthy (in-process backends do not
-    die independently of the driver)."""
+    server (bounded by `probe_timeout_s`); anything else is assumed healthy
+    (in-process backends do not die independently of the driver)."""
     if hasattr(backend, "probe"):
         try:
             return bool(backend.probe())
@@ -197,7 +197,7 @@ def _probe_backend(backend) -> bool:
         return bool(getattr(backend.pool, "alive", True))
     if isinstance(backend, HTTPBackend):
         for c in backend.clients:
-            doc = probe_health(getattr(c, "url", ""))
+            doc = probe_health(getattr(c, "url", ""), timeout=probe_timeout_s)
             if doc is None or doc.get("status") != "ok":
                 return False
         return True
@@ -220,9 +220,14 @@ class FleetManager:
          `retire_streak` is drained (kept enrolled: probation can bring it
          back, and its indices/bindings stay valid);
       4. **scale** — when mean in-flight depth per live backend exceeds
-         `scale_up_inflight` and the fleet is below `max_backends`, call
-         `spawn()` for a fresh backend (e.g. a new `ThreadedPool`) and
-         enroll it.
+         `scale_up_inflight` — or, with a `UQService` attached (`service=`),
+         when the service's queued waves per live backend exceed
+         `scale_up_queued_waves` — and the fleet is below `max_backends`,
+         call `spawn()` for a fresh backend (e.g. a new `ThreadedPool`) and
+         enroll it. The service signal sees demand the router cannot: waves
+         held back by the fair-share scheduler have no in-flight footprint
+         yet, so a multi-tenant backlog scales the fleet BEFORE it turns
+         into dispatch-side queueing.
 
     Every action lands in the tick's report (and `self.events`), so tests
     and the chaos benchmark assert on exact lifecycle sequences.
@@ -236,9 +241,12 @@ class FleetManager:
         watch_urls: Sequence[str] = (),
         model_name: str = "forward",
         scale_up_inflight: float = 8.0,
+        service=None,
+        scale_up_queued_waves: float = 4.0,
         max_backends: int = 8,
         retire_streak: int = 3,
         http_timeout: float = 600.0,
+        probe_timeout_s: float = 5.0,
     ):
         router = fabric.backend if isinstance(fabric, EvaluationFabric) else fabric
         if not isinstance(router, FabricRouter):
@@ -251,9 +259,12 @@ class FleetManager:
         self.watch_urls = list(watch_urls)
         self.model_name = model_name
         self.scale_up_inflight = float(scale_up_inflight)
+        self.service = service
+        self.scale_up_queued_waves = float(scale_up_queued_waves)
         self.max_backends = int(max_backends)
         self.retire_streak = int(retire_streak)
         self.http_timeout = float(http_timeout)
+        self.probe_timeout_s = float(probe_timeout_s)
         self._enrolled_urls: set[str] = set()
         self.events: list[dict] = []
         self._stop = threading.Event()
@@ -273,7 +284,7 @@ class FleetManager:
         for url in self.watch_urls:
             if url in self._enrolled_urls:
                 continue
-            doc = probe_health(url)
+            doc = probe_health(url, timeout=self.probe_timeout_s)
             if (
                 doc is None or doc.get("status") != "ok"
                 or self.model_name not in doc.get("models", [self.model_name])
@@ -293,7 +304,7 @@ class FleetManager:
         for i, admin in enumerate(load["admin"]):
             if admin == "live" or load["inflight"][i] > 0:
                 continue
-            if _probe_backend(self.router.backends[i]):
+            if _probe_backend(self.router.backends[i], self.probe_timeout_s):
                 self.router.reinstate_backend(i)
                 report["reinstated"].append(i)
                 self._note("reinstate", backend=i)
@@ -308,20 +319,29 @@ class FleetManager:
             if load["admin"][i] != "live":
                 continue
             if streak >= self.retire_streak or not _probe_backend(
-                self.router.backends[i]
+                self.router.backends[i], self.probe_timeout_s
             ):
                 self.router.drain_backend(i)
                 report["drained"].append(i)
                 self._note("drain", backend=i, fail_streak=streak)
         load = self.router.load()
-        # 4. scale up under sustained queueing
+        # 4. scale up under sustained queueing — router in-flight depth, or
+        # (service-aware) the multi-tenant scheduler's queued-wave backlog
         live = [i for i, a in enumerate(load["admin"]) if a == "live"]
         if self.spawn is not None and live and len(live) < self.max_backends:
             depth = sum(load["inflight"][i] for i in live) / len(live)
+            queued = 0.0
+            if self.service is not None:
+                queued = self.service.load()["queued_waves"] / len(live)
             if depth > self.scale_up_inflight:
                 idx = self.router.add_backend(self.spawn())
                 report["spawned"] = 1
                 self._note("spawn", backend=idx, mean_inflight=round(depth, 2))
+            elif queued > self.scale_up_queued_waves:
+                idx = self.router.add_backend(self.spawn())
+                report["spawned"] = 1
+                self._note("spawn", backend=idx,
+                           queued_waves_per_live=round(queued, 2))
         return report
 
     # -- background loop -----------------------------------------------------
@@ -378,10 +398,14 @@ class CampaignCheckpoint:
     """
 
     def __init__(self, directory: str, *, keep_last: int = 3,
-                 router=None, surrogate=None):
+                 router=None, surrogate=None, campaign_id: str | None = None):
         self.manager = CheckpointManager(directory, keep_last=keep_last)
         self._router = router
         self._surrogate = surrogate
+        # multi-tenant provenance: the owning campaign's id rides in every
+        # manifest (and META.json top level), so a checkpoint directory is
+        # attributable to the campaign that wrote it
+        self.campaign_id = campaign_id
 
     def attach(self, *, router=None, surrogate=None):
         """Late-bind the infra whose state rides along (chainable)."""
@@ -432,6 +456,8 @@ class CampaignCheckpoint:
         attached router/surrogate state, atomically, as step `step`."""
         arrays = {k: np.asarray(v) for k, v in arrays.items()}
         meta = dict(meta)
+        if self.campaign_id is not None:
+            meta["campaign_id"] = self.campaign_id
         router = self._router_obj()
         if router is not None:
             meta["router"] = router.state_dict()
@@ -452,7 +478,7 @@ class CampaignCheckpoint:
             },
         }
         self.manager.save(int(step), arrays, blocking=blocking,
-                          manifest=manifest)
+                          manifest=manifest, campaign_id=self.campaign_id)
 
     def wait(self):
         self.manager.wait()

@@ -36,7 +36,21 @@ def _make_handler(models: dict[str, Model]):
     # request counters below are the server's shared state and follow the
     # same lock discipline the fabric telemetry does
     stats = {"requests": 0, "errors": 0}
+    # per-tenant accounting keyed on the X-UQ-Tenant request header (the
+    # service tier's identity on the wire): requests and model-evaluation
+    # points, served back on GET /Tenants
+    tenant_stats: dict[str, dict] = {}
     stats_lock = named_lock("server.stats")
+
+    def _tenant_note(tenant: str | None, points: int):
+        if tenant is None:
+            return
+        with stats_lock:
+            bucket = tenant_stats.setdefault(
+                tenant, {"requests": 0, "points": 0}
+            )
+            bucket["requests"] += 1
+            bucket["points"] += int(points)
 
     class Handler(BaseHTTPRequestHandler):
         def log_message(self, *args):  # silence
@@ -70,6 +84,12 @@ def _make_handler(models: dict[str, Model]):
                         "stats": snap,
                     }
                 )
+            elif self.path.rstrip("/") == "/Tenants":
+                # per-tenant request/point accounting for the service tier —
+                # who is hitting this server, and how hard
+                with stats_lock:
+                    snap = {k: dict(v) for k, v in tenant_stats.items()}
+                self._send({"tenants": snap})
             else:
                 self._send(error_body("NotFound", self.path), 404)
 
@@ -85,6 +105,14 @@ def _make_handler(models: dict[str, Model]):
             model = models.get(name)
             if model is None:
                 return self._send(error_body("ModelNotFound", str(name)), 400)
+            # tenant accounting: one request, plus however many points the
+            # batched routes carry (per-point routes count one)
+            inputs = body.get("inputs")
+            _tenant_note(
+                self.headers.get("X-UQ-Tenant"),
+                len(inputs) if isinstance(inputs, list)
+                else (1 if "input" in body else 0),
+            )
             config = body.get("config") or {}
             caps = model_capabilities(model, config)
             try:

@@ -83,30 +83,36 @@ class CheckpointManager:
 
     # -- save ----------------------------------------------------------------
     def save(self, step: int, state: dict, blocking: bool = True,
-             manifest: dict | None = None):
+             manifest: dict | None = None, campaign_id: str | None = None):
         """state: arbitrary pytree of jax/np arrays. `manifest`: optional
         JSON-able document stored in META.json alongside the leaves (e.g.
         the tree structure, rng state, counters) — readable via `meta()`
-        without loading a single leaf."""
+        without loading a single leaf. `campaign_id`: multi-tenant
+        provenance stamped at the META.json top level, so a service-tier
+        checkpoint directory names the campaign that produced it."""
         leaves, treedef = _flatten(state)
         host_leaves = [np.asarray(l) for l in leaves]  # device->host snapshot
         if blocking:
-            self._write(step, host_leaves, manifest)
+            self._write(step, host_leaves, manifest, campaign_id)
         else:
             self.wait()  # one async save in flight at a time
             self._save_thread = threading.Thread(
-                target=self._write, args=(step, host_leaves, manifest), daemon=True
+                target=self._write,
+                args=(step, host_leaves, manifest, campaign_id), daemon=True,
             )
             self._save_thread.start()
 
-    def save_async(self, step: int, state: dict, manifest: dict | None = None):
-        self.save(step, state, blocking=False, manifest=manifest)
+    def save_async(self, step: int, state: dict, manifest: dict | None = None,
+                   campaign_id: str | None = None):
+        self.save(step, state, blocking=False, manifest=manifest,
+                  campaign_id=campaign_id)
 
     def wait(self):
         if self._save_thread is not None and self._save_thread.is_alive():
             self._save_thread.join()
 
-    def _write(self, step: int, host_leaves: list, manifest: dict | None = None):
+    def _write(self, step: int, host_leaves: list, manifest: dict | None = None,
+               campaign_id: str | None = None):
         final = self._step_dir(step)
         tmp = self.dir / f".tmp_step_{step:08d}_{os.getpid()}"
         if tmp.exists():
@@ -116,12 +122,13 @@ class CheckpointManager:
             np.save(tmp / f"leaf_{i:05d}.npy", leaf)
         # META.json doubles as the completeness sentinel: written after the
         # last leaf, so a directory holding leaves but no META is torn
-        (tmp / "META.json").write_text(
-            json.dumps({
-                "step": step, "n_leaves": len(host_leaves), "t": time.time(),
-                "manifest": manifest or {},
-            })
-        )
+        doc = {
+            "step": step, "n_leaves": len(host_leaves), "t": time.time(),
+            "manifest": manifest or {},
+        }
+        if campaign_id is not None:
+            doc["campaign_id"] = campaign_id
+        (tmp / "META.json").write_text(json.dumps(doc))
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)  # atomic publish

@@ -313,6 +313,12 @@ def _run_fused(
         lps_out[:, lo:lo + S] = np.asarray(lps_blk).T
         if telemetry is not None:
             telemetry.note_steps(S, waves=1)
+            # service-tier campaigns meter device-resident work through this
+            # optional hook (budget charge + per-tenant fused-step telemetry;
+            # it does NOT re-count steps — note_steps above already did)
+            nb = getattr(telemetry, "note_fused_block", None)
+            if nb is not None:
+                nb(len(samples), S)
         if checkpoint is not None and every_blocks and (b + 1) % every_blocks == 0:
             done = (b + 1) * S
             arrays = {k: np.asarray(v) for k, v in carry.items() if k != "key"}

@@ -56,6 +56,10 @@ class EnsembleResult:
     #: final (possibly adapted) proposal covariance / step size
     proposal_cov: np.ndarray | None = None
     final_step_size: float | None = None
+    #: None for a full run; "budget" when a campaign budget ran out mid-run
+    #: and the sampler stopped cleanly at a step boundary (arrays hold the
+    #: completed prefix, a final checkpoint was saved when one is attached)
+    terminated: str | None = None
 
     @property
     def accept_rate(self) -> float:
@@ -302,6 +306,8 @@ def ensemble_random_walk_metropolis(
             telemetry=telemetry, checkpoint=checkpoint,
             checkpoint_every=checkpoint_every,
         )
+    from repro.core.fabric import BudgetExhausted
+
     xs = np.atleast_2d(np.asarray(x0s, float)).copy()
     K, d = xs.shape
     L = np.linalg.cholesky(np.atleast_2d(prop_cov))
@@ -311,9 +317,18 @@ def ensemble_random_walk_metropolis(
     samples = np.empty((K, n_steps, d))
     lps_out = np.empty((K, n_steps))
     acc = np.zeros(K)
+    terminated = None
+    n_done = n_steps
     for i in range(n_steps):
         props = xs + rng.standard_normal((K, d)) @ L.T
-        lp_props = np.asarray(logpost_batch(props), float).ravel()
+        try:
+            lp_props = np.asarray(logpost_batch(props), float).ravel()
+        except BudgetExhausted:
+            # campaign budget ran out: stop at the step boundary — every
+            # completed step's samples are valid, nothing is corrupted
+            terminated = "budget"
+            n_done = i
+            break
         accept = np.log(rng.uniform(size=K)) < lp_props - lps
         xs = np.where(accept[:, None], props, xs)
         lps = np.where(accept, lp_props, lps)
@@ -327,8 +342,10 @@ def ensemble_random_walk_metropolis(
             if i >= adapt_start and (i - adapt_start) % adapt_interval == 0:
                 L = adapter.chol()
     return EnsembleResult(
-        samples, lps_out, acc / n_steps, K * (n_steps + 1), n_steps + 1,
+        samples[:, :n_done], lps_out[:, :n_done], acc / max(n_done, 1),
+        K * (n_done + 1), n_done + 1,
         proposal_cov=None if adapter is None else adapter.proposal_cov(),
+        terminated=terminated,
     )
 
 
@@ -474,10 +491,36 @@ def ensemble_mala(
             "ki,ij,kj->k", diff_minus_drift, Cinv, diff_minus_drift
         )
 
+    from repro.core.fabric import BudgetExhausted
+
+    terminated = None
+    n_done = n_steps
     for i in range(start, n_steps):
         drift = 0.5 * eps**2 * gs @ C.T
         props = xs + drift + eps * rng.standard_normal((K, d)) @ L.T
-        lp_props, g_props = value_grad_logpost(props)
+        try:
+            lp_props, g_props = value_grad_logpost(props)
+        except BudgetExhausted:
+            # budget stop at a step boundary: the prefix is a valid chain;
+            # land a final checkpoint so the campaign resumes (under a new
+            # budget) exactly where the old one ran dry
+            terminated = "budget"
+            n_done = i
+            if checkpoint is not None:
+                checkpoint.save(
+                    i,
+                    {
+                        "xs": xs, "lps": lps, "gs": gs, "acc": acc,
+                        "samples": samples[:, :i].copy(),
+                        "lps_out": lps_out[:, :i].copy(),
+                    },
+                    {
+                        "i_next": i, "eps": float(eps),
+                        "rng_state": rng.bit_generator.state,
+                        "terminated": "budget",
+                    },
+                )
+            break
         lp_props = np.asarray(lp_props, float).ravel()
         g_props = np.atleast_2d(np.asarray(g_props, float))
         drift_rev = 0.5 * eps**2 * g_props @ C.T
@@ -515,8 +558,9 @@ def ensemble_mala(
                 },
             )
     return EnsembleResult(
-        samples, lps_out, acc / n_steps, K * (n_steps + 1), n_steps + 1,
-        n_grad_waves=n_steps + 1, final_step_size=eps,
+        samples[:, :n_done], lps_out[:, :n_done], acc / max(n_done, 1),
+        K * (n_done + 1), n_done + 1,
+        n_grad_waves=n_done + 1, final_step_size=eps, terminated=terminated,
     )
 
 

@@ -64,6 +64,9 @@ class EnsembleMLDAResult:
     #: passed / pass_rate / skipped + GP fit counters — see
     #: `uq.surrogate.SurrogateScreen.stats`)
     surrogate: dict | None = None
+    #: "budget" when a service-tier campaign budget ran out mid-run (the
+    #: returned samples are the truncated-but-valid prefix), else None
+    terminated: str | None = None
 
     @property
     def samples_flat(self) -> np.ndarray:
@@ -519,8 +522,24 @@ def ensemble_mlda(
         rng.bit_generator.state = meta["rng_state"]
     else:
         lps = sampler._lp(top, xs)
+    from repro.core.fabric import BudgetExhausted
+
+    terminated = None
+    n_done = n_samples
     for i in range(start, n_samples):
-        xs, lps, _ = sampler.step(top, xs, lps)
+        try:
+            xs, lps, _ = sampler.step(top, xs, lps)
+        except BudgetExhausted:
+            # campaign budget ran out: the completed finest-level steps are
+            # a valid chain prefix; land a final checkpoint at this
+            # boundary so re-opening the campaign resumes exactly here
+            terminated = "budget"
+            n_done = i
+            if checkpoint is not None:
+                arrays, meta = _snap(i)
+                meta["terminated"] = "budget"
+                checkpoint.save(i, arrays, meta)
+            break
         out[:, i] = xs
         if (
             checkpoint is not None and checkpoint_every
@@ -533,10 +552,11 @@ def ensemble_mlda(
         for l in range(len(logpost_batches))
     ]
     return EnsembleMLDAResult(
-        out, rates, list(sampler.evals), sampler.waves,
+        out[:, :n_done], rates, list(sampler.evals), sampler.waves,
         proposal_cov=None if sampler.adapter is None
         else sampler.adapter.proposal_cov(),
         surrogate=None if surrogate is None else surrogate.stats(),
+        terminated=terminated,
     )
 
 
