@@ -110,6 +110,15 @@ def _derived_and_rate(name: str, out) -> tuple[str, float | None]:
             f"wave_savings={ck['wave_savings']:.2f}"
         )
         rate = ch["evals_per_sec"]
+    elif name.startswith("second_order"):
+        ml, rt, lp = out["mlda"], out["router"], out["laplace"]
+        derived = (
+            f"mala_ess_ratio={ml['ratio']:.2f}x;"
+            f"laplace_full_wall_s={lp['full']['wall_s']:.1f};"
+            f"imbalance_per_cap={rt['per_capability']:.2f}"
+            f"(blended={rt['blended']:.2f})"
+        )
+        rate = ml["fine_evals_per_sec"]
     elif name == "roofline":
         fracs = [c["roofline_fraction"] for c in out]
         derived = f"cells={len(out)};median_frac={sorted(fracs)[len(fracs)//2]:.3f}"
@@ -137,6 +146,7 @@ def main() -> None:
         multi_tenant,
         qmc_defects,
         roofline,
+        second_order,
         sparse_grid_l2sea,
         surrogate_da,
         weak_scaling,
@@ -151,6 +161,7 @@ def main() -> None:
         ("grad_mcmc_mala", grad_mcmc.main),
         ("fused_sampler", fused_sampler.main),
         ("surrogate_da_sec4.3", surrogate_da.main),
+        ("second_order", second_order.main),
         ("elastic_fleet", elastic_fleet.main),
         ("multi_tenant", multi_tenant.main),
         ("roofline", roofline.main),

@@ -1,0 +1,305 @@
+"""Second-order wire surface benchmark (ROADMAP item 5): what does the
+`/ApplyHessianBatch` + per-capability-router slice buy on the tsunami
+inverse problem?
+
+Three phases:
+
+1. **gradient-informed MLDA** — `ensemble_mlda(coarse_sampler="mala")`
+   vs the blind random-walk baseline on the SAME coarsened tsunami
+   posterior (sharp heights/arrival-time likelihood, data drawn at the
+   fine level). The coarse MALA subchains ride fused value-and-gradient
+   waves; delayed acceptance stays exact at the fine level. Headline
+   number: ESS per fine-model evaluation, MALA / blind — the ISSUE's
+   acceptance bar is >= 1.5x (`min_ratio`, quick/full modes).
+2. **Laplace preview** — `laplace_preview` on tsunami level 0 with both
+   curvature modes; "full" exercises the new `apply_hessian` waves
+   (reverse-over-forward HVPs through the lax.scan solver), "gn" is the
+   Jacobian-only control. Records wall time, wave counts, and the
+   GN-vs-full MAP agreement.
+3. **mixed-traffic router** — an evaluate+gradient storm over a
+   4-backend pool whose adjoint costs span 4x (forward costs uniform).
+   Per-(backend, capability) EWMAs must hold the wave-split imbalance
+   <= `max_imbalance` (1.3); the pre-fix blended estimate is re-measured
+   via ablation (`_ewma_for` pinned to the cross-op blend) and recorded
+   alongside as the regression baseline.
+
+    PYTHONPATH=src python -m benchmarks.second_order [--smoke] [--json PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.apps.tsunami import TsunamiModel
+from repro.core.fabric import EvaluationFabric, FabricRouter, ModelBackend
+from repro.core.interface import Capabilities, Model
+from repro.uq.inference import laplace_preview
+from repro.uq.mcmc import effective_sample_size
+from repro.uq.mlda import ensemble_mlda
+
+TRUE_THETA = np.array([90.0, 2.5])
+PRIOR = ((30.0, 150.0), (0.5, 4.0))
+NOISE_SD = np.array([0.5, 0.05, 0.5, 0.05])
+
+
+def _bench_model(smoke: bool) -> TsunamiModel:
+    class Bench(TsunamiModel):
+        # coarsened pair so quick mode finishes in ~1 min on one CPU core
+        N_CELLS = {0: 64, 1: 128} if smoke else {0: 128, 1: 256}
+
+    return Bench()
+
+
+def _pooled_ess(samples: np.ndarray, burn: float = 0.2) -> float:
+    """Mean over both parameters of the ESS summed across chains."""
+    b = int(samples.shape[1] * burn)
+    d = samples.shape[2]
+    return float(sum(
+        effective_sample_size(samples[k, b:, j])
+        for k in range(len(samples)) for j in range(d)
+    )) / d
+
+
+# -- phase 1: gradient-informed vs blind MLDA ---------------------------------
+
+
+def _mlda_phase(model, smoke: bool, quick: bool) -> dict:
+    rng = np.random.default_rng(3)
+    data = np.asarray(model([list(TRUE_THETA)], {"level": 1})[0])
+    data = data + rng.standard_normal(4) * NOISE_SD
+
+    def loglik(y):
+        return -0.5 * float(np.sum(((np.asarray(y) - data) / NOISE_SD) ** 2))
+
+    def grad_loglik(y):  # traceable: rides the fused value+grad wave
+        return -(y - data) / NOISE_SD**2
+
+    def logprior(th):
+        ok = all(lo <= t <= hi for t, (lo, hi) in zip(th, PRIOR))
+        return 0.0 if ok else -np.inf
+
+    def grad_logprior(th):
+        return np.zeros(2)
+
+    n_chains = 8 if smoke else 16
+    n_samples = 60 if smoke else (160 if quick else 240)
+    x0s = TRUE_THETA + rng.standard_normal((n_chains, 2)) * [4.0, 0.15]
+    configs = [{"level": 0}, {"level": 1}]
+
+    def run(prop_cov, **kw) -> dict:
+        fab = EvaluationFabric(ModelBackend(model), cache_size=4096)
+        t0 = time.monotonic()
+        try:
+            res = ensemble_mlda(
+                None, x0s.copy(), n_samples, [4], prop_cov,
+                np.random.default_rng(42), fabric=fab, loglik=loglik,
+                logprior=logprior, level_configs=configs, **kw,
+            )
+        finally:
+            fab.shutdown()
+        wall = time.monotonic() - t0
+        fine = res.evals_per_level[-1]
+        ess = _pooled_ess(res.samples)
+        return {
+            "ess": round(ess, 2),
+            "fine_evals": int(fine),
+            "ess_per_fine_eval": ess / fine,
+            "accept_rates": [round(a, 3) for a in res.accept_rates],
+            "wall_s": round(wall, 2),
+        }
+
+    # blind baseline: proposal tuned to the POSTERIOR scale (fair fight)
+    blind = run(np.diag([8.0**2, 0.25**2]))
+    # MALA coarse subchains: preconditioner ~ posterior covariance
+    mala = run(
+        np.diag([4.0, 0.01]), coarse_sampler="mala", mala_step=1.0,
+        grad_loglik=grad_loglik, grad_logprior=grad_logprior,
+    )
+    ratio = mala["ess_per_fine_eval"] / blind["ess_per_fine_eval"]
+    return {
+        "blind": blind,
+        "mala": mala,
+        "ratio": round(ratio, 3),
+        # smoke sizes are too small for a stable ESS estimate: sanity
+        # floor only; quick/full assert the ISSUE's acceptance bar
+        "min_ratio": 0.2 if smoke else 1.5,
+        "fine_evals_per_sec": round(mala["fine_evals"] / mala["wall_s"], 1),
+    }
+
+
+# -- phase 2: Laplace preview wall time ---------------------------------------
+
+
+def _laplace_phase(model, smoke: bool) -> dict:
+    rng = np.random.default_rng(3)
+    data = np.asarray(model([list(TRUE_THETA)], {"level": 1})[0])
+    data = data + rng.standard_normal(4) * NOISE_SD
+    out = {}
+    for curvature in ("gn", "full"):
+        with EvaluationFabric(ModelBackend(model), cache_size=0) as fab:
+            t0 = time.monotonic()
+            res = laplace_preview(
+                fab, data, np.diag(NOISE_SD**2), TRUE_THETA + [5.0, -0.3],
+                np.diag([100.0, 0.25]), curvature=curvature, n_ensemble=4,
+                n_iters=4 if smoke else 8, rng=np.random.default_rng(0),
+                config={"level": 0},
+            )
+            wall = time.monotonic() - t0
+            pc = fab.telemetry()["per_capability"]
+        out[curvature] = {
+            "wall_s": round(wall, 2),
+            "map": [round(float(v), 3) for v in res.mean],
+            "posterior_sd": [
+                round(float(v), 4) for v in np.sqrt(np.diag(res.cov))
+            ],
+            "hessian_waves": pc.get("apply_hessian", {}).get("waves", 0),
+            "value_grad_waves": pc["value_and_gradient"]["waves"],
+        }
+    out["map_agreement"] = round(float(np.max(np.abs(
+        np.asarray(out["full"]["map"]) - np.asarray(out["gn"]["map"])
+    ))), 4)
+    return out
+
+
+# -- phase 3: mixed-traffic router imbalance ----------------------------------
+
+
+class _TimedOpModel(Model):
+    """Quadratic with separately tunable forward/adjoint per-point costs."""
+
+    def __init__(self, eval_cost_s: float, grad_cost_s: float):
+        super().__init__("forward")
+        self.eval_cost_s = eval_cost_s
+        self.grad_cost_s = grad_cost_s
+
+    def get_input_sizes(self, c=None):
+        return [2]
+
+    def get_output_sizes(self, c=None):
+        return [1]
+
+    def capabilities(self, config=None):
+        return Capabilities(
+            evaluate=True, evaluate_batch=True, gradient=True,
+            gradient_batch=True,
+        )
+
+    def __call__(self, theta, config=None):
+        return self.evaluate_batch([theta], config)[0]
+
+    def evaluate_batch(self, thetas, config=None):
+        thetas = np.atleast_2d(thetas)
+        time.sleep(self.eval_cost_s * len(thetas))
+        return (thetas**2).sum(1, keepdims=True)
+
+    def gradient_batch(self, thetas, senss, config=None):
+        thetas = np.atleast_2d(thetas)
+        time.sleep(self.grad_cost_s * len(thetas))
+        return 2 * thetas * np.atleast_2d(senss)
+
+
+def _router_phase(smoke: bool) -> dict:
+    # forward solvers uniform, adjoints span 4x across the pool
+    costs = [(0.0008, 0.0008), (0.0008, 0.0008),
+             (0.0008, 0.0032), (0.0008, 0.0032)]
+    n_rounds = 4 if smoke else 8
+    n_points = 32 if smoke else 48
+
+    def storm(router) -> tuple[float, float]:
+        rng = np.random.default_rng(1)
+        fab = EvaluationFabric(router, cache_size=0)
+        try:
+            for _ in range(2):  # warm BOTH per-op estimates
+                fab.evaluate_batch(rng.standard_normal((n_points, 2)))
+                fab.gradient_batch(
+                    rng.standard_normal((n_points, 2)),
+                    np.ones((n_points, 1)),
+                )
+            router.reset_stats()
+            t0 = time.monotonic()
+            for _ in range(n_rounds):
+                X = rng.standard_normal((n_points, 2))
+                fab.evaluate_batch(X)
+                fab.gradient_batch(X, np.ones((n_points, 1)))
+            wall = time.monotonic() - t0
+            return router.stats()["imbalance_ewma"], wall
+        finally:
+            fab.shutdown()
+
+    def mk_router() -> FabricRouter:
+        return FabricRouter([ModelBackend(_TimedOpModel(*c)) for c in costs])
+
+    per_cap, wall_p = storm(mk_router())
+    blended_router = mk_router()
+    # ablate the fix: route every op on the blended cross-op estimate
+    blended_router._ewma_for = (
+        lambda i, op: blended_router._ewma_s[i]
+    )
+    blended, wall_b = storm(blended_router)
+    return {
+        "per_capability": round(per_cap, 3),
+        "blended": round(blended, 3),
+        "wall_per_capability_s": round(wall_p, 2),
+        "wall_blended_s": round(wall_b, 2),
+        # loaded CI runners jitter the sleeps: looser smoke ceiling
+        "max_imbalance": 1.6 if smoke else 1.3,
+    }
+
+
+def main(quick: bool = True, smoke: bool = False) -> dict:
+    model = _bench_model(smoke)
+    mlda = _mlda_phase(model, smoke, quick)
+    print(f"  mlda: mala {mlda['mala']['ess_per_fine_eval']:.4f} vs blind "
+          f"{mlda['blind']['ess_per_fine_eval']:.4f} ESS/fine-eval "
+          f"-> {mlda['ratio']:.2f}x (floor {mlda['min_ratio']}x)")
+    laplace = _laplace_phase(model, smoke)
+    print(f"  laplace: gn {laplace['gn']['wall_s']}s / full "
+          f"{laplace['full']['wall_s']}s "
+          f"({laplace['full']['hessian_waves']} hessian waves), "
+          f"MAP agreement {laplace['map_agreement']}")
+    router = _router_phase(smoke)
+    print(f"  router: imbalance {router['per_capability']} per-capability "
+          f"vs {router['blended']} blended "
+          f"(ceiling {router['max_imbalance']})")
+    return {"mlda": mlda, "laplace": laplace, "router": router}
+
+
+def _cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes + loose floors for CI")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="write the benchmark telemetry document")
+    args = ap.parse_args()
+    doc = main(smoke=args.smoke)
+    if args.json:
+        # write BEFORE the gate checks: on failure the artifact is the
+        # investigation's starting point
+        Path(args.json).write_text(json.dumps(doc, indent=1))
+        print(f"telemetry -> {args.json}")
+    ml, rt = doc["mlda"], doc["router"]
+    if ml["ratio"] < ml["min_ratio"]:
+        raise SystemExit(
+            f"gradient-informed MLDA ESS/fine-eval ratio {ml['ratio']} below "
+            f"the floor {ml['min_ratio']}: MALA coarse subchains are not "
+            f"paying for their gradient waves"
+        )
+    if rt["per_capability"] > rt["max_imbalance"]:
+        raise SystemExit(
+            f"mixed-traffic imbalance {rt['per_capability']} above the "
+            f"ceiling {rt['max_imbalance']}: per-capability EWMAs are not "
+            f"holding the split"
+        )
+    if doc["laplace"]["full"]["hessian_waves"] == 0:
+        raise SystemExit(
+            "laplace curvature='full' dispatched no apply_hessian waves: "
+            "the second-order path is not reaching the fabric"
+        )
+
+
+if __name__ == "__main__":
+    _cli()

@@ -3,8 +3,8 @@ the hot dispatch/sampler modules.
 
 The whole fabric economics rest on batched waves; a Python loop that calls
 the model once per theta inside `core/fabric.py`, `core/pool.py`,
-`core/service.py`, `uq/mcmc.py` or `uq/mlda.py` silently shatters a wave
-into N dispatches.
+`core/service.py`, `uq/inference.py`, `uq/mcmc.py` or `uq/mlda.py`
+silently shatters a wave into N dispatches.
 The per-point fallback belongs ONLY in the `Model` base class
 (`core/interface.py`), which is deliberately outside this rule's scope.
 
@@ -24,6 +24,7 @@ HOT_MODULES = (
     "core/pool.py",
     "core/service.py",
     "uq/fused.py",
+    "uq/inference.py",
     "uq/mcmc.py",
     "uq/mlda.py",
 )

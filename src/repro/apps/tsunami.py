@@ -84,7 +84,12 @@ def _sqrt_safe(x):
 @_sqrt_safe.defjvp
 def _sqrt_safe_jvp(primals, tangents):
     (x,), (t,) = primals, tangents
-    y = jnp.sqrt(x)
+    # the rule computes y through _sqrt_safe ITSELF (same primal — it IS
+    # jnp.sqrt) so differentiating the rule again, as forward-over-reverse
+    # HVPs do, re-enters the clamped rule instead of hitting the raw
+    # sqrt'(0) = inf at dry interfaces (0 * inf = NaN in the second-order
+    # tangents)
+    y = _sqrt_safe(x)
     return y, t * 0.5 / jnp.maximum(y, jnp.asarray(1e-3, y.dtype))
 
 
@@ -286,6 +291,34 @@ def _jvp_batch(thetas: jax.Array, vecs: jax.Array, n_cells: int, smoothed: bool)
     )[1]
 
 
+@partial(jax.jit, static_argnames=("n_cells", "smoothed"))
+def _hvp_batch(
+    thetas: jax.Array, senss: jax.Array, vecs: jax.Array,
+    n_cells: int, smoothed: bool,
+):
+    """[N, 2] x [N, 4] x [N, 2] -> [N, 2]: lockstep Hessian-vector products
+    d/de [J(theta + e vec)^T sens] via REVERSE-over-forward: the tangent
+    J v rides the scan forward (doubling the carry, no storage), then one
+    reverse sweep through the remat'd scan differentiates sens . (J v).
+    The lanes' Jacobians are block-diagonal, so the batch HVP is the
+    per-lane HVP. Forward-over-reverse (jvp of the VJP) is the textbook
+    alternative but NaNs here: transposing the scan's backward sweep
+    re-enters the dry-interface kinks (`maximum(., 0)` against
+    `sqrt'(0)`) on the saturated branch, where the second-order tangents
+    hit 0 * inf — the reverse-over-forward order never materializes that
+    branch."""
+    dtype = thetas.dtype
+
+    def directional(th):
+        _, tang = jax.jvp(
+            lambda t: _solve_batch(t, n_cells, smoothed), (th,),
+            (jnp.asarray(vecs, dtype),),
+        )
+        return jnp.sum(jnp.asarray(senss, tang.dtype) * tang)
+
+    return jax.grad(directional)(thetas)
+
+
 # Chunked dispatch for `evaluate_batch`: concurrent jitted solves on
 # power-of-2-wide chunks. Two effects stack: chunks stay cache-resident
 # ([C, <=64] working sets), and PJRT CPU executes concurrent computations on
@@ -358,6 +391,7 @@ class TsunamiModel(Model):
             evaluate=True, evaluate_batch=True,
             gradient=True, gradient_batch=True,
             apply_jacobian=True, apply_jacobian_batch=True,
+            apply_hessian=True, apply_hessian_batch=True,
         )
 
     def __call__(self, parameters, config=None):
@@ -465,6 +499,46 @@ class TsunamiModel(Model):
         if len(starts) == 1:
             return jvp_chunk(0)
         return np.concatenate(list(_chunk_executor().map(jvp_chunk, starts)), axis=0)
+
+    def apply_hessian(self, out_wrt, in_wrt1, in_wrt2, parameters, sens, vec, config=None):
+        theta = np.asarray(parameters[in_wrt1], float)
+        sens4 = np.zeros(4)
+        sens4[:] = np.asarray(sens, float)  # single output block
+        return self.apply_hessian_batch(
+            theta[None, :], sens4[None, :], np.asarray(vec, float)[None, :], config
+        )[0].tolist()
+
+    def apply_hessian_batch(self, thetas, senss, vecs, config=None) -> np.ndarray:
+        """[N, 2] x [N, 4] x [N, 2] -> [N, 2]: lockstep HVP waves
+        (reverse-over-forward through the batch solver). Chunked like
+        gradient waves — the reverse sweep dominates the footprint, the
+        forward-mode tangents ride along at carry cost."""
+        level = int((config or {}).get("level", 0))
+        n_cells, smoothed = self.N_CELLS[level], (level == 0)
+        thetas = np.atleast_2d(np.asarray(thetas, np.float32))
+        senss = np.atleast_2d(np.asarray(senss, np.float32))
+        vecs = np.atleast_2d(np.asarray(vecs, np.float32))
+        N = len(thetas)
+        with self._lock:
+            self.stats[level] += N
+        chunk, starts = self._grad_chunks(N)
+
+        def hvp_chunk(lo: int) -> np.ndarray:
+            part = thetas[lo: lo + chunk]
+            spart = senss[lo: lo + chunk]
+            vpart = vecs[lo: lo + chunk]
+            bucket = next_pow2(max(len(part), _CHUNK_MIN))
+            pt, _ = pad_to_bucket(part, bucket)
+            ps, _ = pad_to_bucket(spart, bucket)
+            pv, _ = pad_to_bucket(vpart, bucket)
+            out = _hvp_batch(
+                jnp.asarray(pt), jnp.asarray(ps), jnp.asarray(pv), n_cells, smoothed
+            )
+            return np.asarray(out, float)[: len(part)]
+
+        if len(starts) == 1:
+            return hvp_chunk(0)
+        return np.concatenate(list(_chunk_executor().map(hvp_chunk, starts)), axis=0)
 
     def value_and_gradient_batch(self, thetas, sens_fn, config=None):
         """Fused (ys, grads) in ONE jitted dispatch per chunk when `sens_fn`

@@ -162,6 +162,9 @@ class HTTPModel(Model):
         self._jvp_batch_supported: bool | None = (
             True if self._caps.apply_jacobian_batch else None
         )
+        self._hvp_batch_supported: bool | None = (
+            True if self._caps.apply_hessian_batch else None
+        )
 
     def _rpc(self, path: str, body: dict, timeout: float | None = None) -> dict:
         self.round_trips += 1
@@ -320,3 +323,39 @@ class HTTPModel(Model):
             "config": config or {},
         }
         return self._rpc("/ApplyHessian", body)["output"]
+
+    def apply_hessian_batch(self, thetas, senss, vecs, config=None) -> np.ndarray:
+        """[N, n] x [N, m] x [N, n] -> [N, n]: one `/ApplyHessianBatch`
+        round-trip, degrading per the negotiated capability set like
+        `gradient_batch`: batched route -> per-point `/ApplyHessian` loop.
+        There is NO finite-difference rung below that (second differences
+        of a float32 solver are noise) — a server with no Hessian at all
+        raises `UnsupportedCapability` explicitly instead of silently
+        looping N per-point round-trips that will each fail."""
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        senss = np.atleast_2d(np.asarray(senss, float))
+        vecs = np.atleast_2d(np.asarray(vecs, float))
+        if not self._caps.op_supported("apply_hessian"):
+            from repro.core.interface import UnsupportedCapability
+
+            raise UnsupportedCapability(
+                f"server {self.url!r} advertises no apply_hessian capability"
+            )
+        if self._hvp_batch_supported is not False:
+            body = {
+                "name": self.name,
+                "inputs": [list(map(float, t)) for t in thetas],
+                "senss": [list(map(float, s)) for s in senss],
+                "vecs": [list(map(float, v)) for v in vecs],
+                "config": config or {},
+            }
+            try:
+                out = self._rpc("/ApplyHessianBatch", body)
+                self._hvp_batch_supported = True
+                return np.asarray(out["outputs"], float)
+            except RuntimeError as e:
+                if not any(k in str(e) for k in ("NotFound", "UnsupportedFeature")):
+                    raise
+                self._hvp_batch_supported = False
+        # per-point /ApplyHessian loop == the base class's delegation
+        return Model.apply_hessian_batch(self, thetas, senss, vecs, config)

@@ -77,8 +77,12 @@ from repro.core.protocol import config_key, split_blocks
 
 #: capability families a fabric wave can carry; "value_and_gradient" is the
 #: fused forward+VJP wave (an in-process optimization of the gradient
-#: family — it needs no wire capability of its own)
-WAVE_OPS = ("evaluate", "gradient", "apply_jacobian", "value_and_gradient")
+#: family — it needs no wire capability of its own); "apply_hessian" is the
+#: batched HVP wave, whose second operand is the (senss, vecs) PAIR
+WAVE_OPS = (
+    "evaluate", "gradient", "apply_jacobian", "value_and_gradient",
+    "apply_hessian",
+)
 
 #: per-tenant accounting bucket layout (`stats["per_tenant"]`): integer
 #: counters plus backend-seconds. `shared_hits_taken` counts cache rows a
@@ -145,8 +149,9 @@ class FabricBackend:
     def dispatch(self, op: str, thetas: np.ndarray, extra, config: dict | None):
         """Run one wave of capability `op`. `extra` is the second operand:
         None (evaluate), senss [N, m] (gradient), vecs [N, n]
-        (apply_jacobian) or a per-row sens_fn callable (value_and_gradient,
-        returning the (ys, grads) pair)."""
+        (apply_jacobian), a per-row sens_fn callable (value_and_gradient,
+        returning the (ys, grads) pair), or the (senss [N, m], vecs [N, n])
+        tuple (apply_hessian)."""
         if op == "evaluate":
             return self.evaluate(thetas, config)
         raise UnsupportedCapability(
@@ -237,6 +242,9 @@ class SPMDBackend(FabricBackend):
             return self.pool.model.apply_jacobian_batch(thetas, extra, config)
         if op == "value_and_gradient":
             return self.pool.model.value_and_gradient_batch(thetas, extra, config)
+        if op == "apply_hessian":
+            senss, vecs = extra
+            return self.pool.model.apply_hessian_batch(thetas, senss, vecs, config)
         raise UnsupportedCapability(op)
 
     def stats(self):
@@ -373,6 +381,11 @@ class ModelBackend(FabricBackend):
         if op == "value_and_gradient":
             ys, gs = self.model.value_and_gradient_batch(thetas, extra, config)
             return np.atleast_2d(np.asarray(ys, float)), np.atleast_2d(np.asarray(gs, float))
+        if op == "apply_hessian":
+            senss, vecs = extra
+            return np.atleast_2d(np.asarray(
+                self.model.apply_hessian_batch(thetas, senss, vecs, config), float
+            ))
         raise UnsupportedCapability(op)
 
     def stats(self):
@@ -434,6 +447,15 @@ class HTTPBackend(FabricBackend):
         if not _backend_op_ok(self, op):
             raise UnsupportedCapability(f"http backend: servers advertise no {op!r}")
         thetas = np.atleast_2d(np.asarray(thetas, float))
+        if op == "apply_hessian":
+            senss = np.atleast_2d(np.asarray(extra[0], float))
+            vecs = np.atleast_2d(np.asarray(extra[1], float))
+            return self._fan_out(
+                thetas,
+                lambda c, idx: c.apply_hessian_batch(
+                    thetas[idx], senss[idx], vecs[idx], config
+                ),
+            )
         extra = np.atleast_2d(np.asarray(extra, float))
         if op == "gradient":
             return self._fan_out(
@@ -478,9 +500,10 @@ class FabricRouter(FabricBackend):
     ones. The router implements that for whole fabric waves:
 
       * **weighted routing** — each backend carries an EWMA of its observed
-        per-point service time; a wave of N points is split proportionally to
-        `n_instances / ewma` (estimated throughput), so a backend that is 4x
-        slower receives ~1/4 the points and every shard finishes together;
+        per-point service time PER CAPABILITY; a wave of N points is split
+        proportionally to the estimated throughput for that wave's op, so a
+        backend that is 4x slower receives ~1/4 the points and every shard
+        finishes together;
       * **join-shortest-queue tie-break** — leftover points (and whole waves
         smaller than the backend count) go to the backend with the lowest
         projected queue-time `(inflight + assigned) / throughput`;
@@ -522,9 +545,13 @@ class FabricRouter(FabricBackend):
     `policy="round_robin"` disables the latency weighting (even split in
     cursor order) — kept as the explicit baseline benchmarks compare against.
 
-    The EWMA blends service times across capabilities (a gradient point
-    costs more than an evaluate point); that keeps the estimator simple and
-    still balances mixed traffic, since every backend sees the same mix.
+    Service-time estimates are kept PER (backend, capability): a gradient
+    point costs ~3x an evaluate point, so one blended EWMA (the original
+    design) let gradient waves poison the evaluate split and mis-arm the
+    speculation deadline under mixed traffic. Weighted dispatch, steal
+    planning and `_spec_deadline_s` all consult the op-specific estimate;
+    an op with no samples yet on a backend falls back to that backend's
+    blended estimate (still maintained, and what old checkpoints seed).
     """
 
     name = "router"
@@ -564,7 +591,14 @@ class FabricRouter(FabricBackend):
         B = len(self.backends)
         self._lock = named_lock("router")
         self._ex = ThreadPoolExecutor(max_workers=max(8, 4 * B))
-        self._ewma_s: list[float | None] = [None] * B  # per-POINT service time
+        #: blended per-POINT service time (every op folded in) — the
+        #: fallback estimate for ops a backend has not served yet, and the
+        #: back-compat value old checkpoints carry
+        self._ewma_s: list[float | None] = [None] * B
+        #: per-(backend, capability) per-point service time: the estimate
+        #: weighted dispatch / steals / speculation actually consult, so
+        #: ~3x-costlier gradient waves stop skewing the evaluate split
+        self._ewma_op_s: list[dict[str, float]] = [{} for _ in range(B)]
         self._inflight = [0] * B
         self._fail_streak = [0] * B
         self._backoff_until = [0.0] * B
@@ -627,6 +661,7 @@ class FabricRouter(FabricBackend):
         with self._lock:
             self.backends.append(backend)
             self._ewma_s.append(None)
+            self._ewma_op_s.append({})
             self._inflight.append(0)
             self._fail_streak.append(0)
             self._backoff_until.append(0.0)
@@ -689,6 +724,7 @@ class FabricRouter(FabricBackend):
             self._fail_streak[i] = 0
             self._backoff_until[i] = 0.0
             self._ewma_s[i] = None
+            self._ewma_op_s[i] = {}
             self.n_instances = sum(
                 b.n_instances for j, b in enumerate(self.backends)
                 if self._admin[j] == "live"
@@ -707,6 +743,7 @@ class FabricRouter(FabricBackend):
             return {
                 "inflight": list(self._inflight),
                 "ewma_point_s": list(self._ewma_s),
+                "ewma_op_point_s": [dict(d) for d in self._ewma_op_s],
                 "fail_streak": list(self._fail_streak),
                 "backoff_remaining_s": [
                     max(0.0, t - time.monotonic()) for t in self._backoff_until
@@ -722,6 +759,7 @@ class FabricRouter(FabricBackend):
         with self._lock:
             return {
                 "ewma_point_s": list(self._ewma_s),
+                "ewma_op_point_s": [dict(d) for d in self._ewma_op_s],
                 "admin": list(self._admin),
             }
 
@@ -729,12 +767,21 @@ class FabricRouter(FabricBackend):
         """Re-apply a `state_dict` snapshot. Applied positionally over the
         common index prefix: a resumed campaign may run on a different
         fleet size, in which case extra snapshot entries are dropped and
-        extra live backends keep their unknown (optimistic) EWMA."""
+        extra live backends keep their unknown (optimistic) EWMA. Old
+        (pre-per-capability) checkpoints carry only the blended
+        `ewma_point_s` — they load as the blended seed, and the per-op
+        estimates re-learn from the first wave of each capability."""
         ewma = list(doc.get("ewma_point_s", []))
+        ewma_op = list(doc.get("ewma_op_point_s", []))
         admin = list(doc.get("admin", []))
         with self._lock:
             for i in range(min(len(ewma), len(self._ewma_s))):
                 self._ewma_s[i] = ewma[i]
+            for i in range(min(len(ewma_op), len(self._ewma_op_s))):
+                self._ewma_op_s[i] = {
+                    str(op): float(v) for op, v in dict(ewma_op[i]).items()
+                    if v is not None
+                }
             for i in range(min(len(admin), len(self._admin))):
                 if admin[i] in ("live", "draining", "retired"):
                     self._admin[i] = admin[i]
@@ -773,16 +820,28 @@ class FabricRouter(FabricBackend):
         return idx
 
     # -- routing plan --------------------------------------------------------
-    def _throughput(self, i: int) -> float:
-        """Estimated points/sec. The EWMA records wall/points per shard, so
-        it already reflects the backend's INTERNAL parallelism (a 2-instance
-        pool halves its per-point wall) — no n_instances factor here, or
-        multi-instance backends would be double-counted. Unknown backends
-        get the fastest known EWMA (optimistic, so new backends are probed
-        rather than starved)."""
-        e = self._ewma_s[i]
+    def _ewma_for(self, i: int, op: str) -> float | None:
+        """Best per-point service-time estimate for a wave of `op` on
+        backend `i` (caller holds the lock): the op-specific EWMA when that
+        backend has served the op, else the blended cross-op EWMA, else
+        None (never observed at all)."""
+        e = self._ewma_op_s[i].get(op)
+        return self._ewma_s[i] if e is None else e
+
+    def _throughput(self, i: int, op: str = "evaluate") -> float:
+        """Estimated points/sec for capability `op`. The EWMA records
+        wall/points per shard, so it already reflects the backend's INTERNAL
+        parallelism (a 2-instance pool halves its per-point wall) — no
+        n_instances factor here, or multi-instance backends would be
+        double-counted. Unknown backends get the fastest known estimate
+        (optimistic, so new backends are probed rather than starved)."""
+        e = self._ewma_for(i, op)
         if e is None:
-            known = [x for x in self._ewma_s if x is not None]
+            known = [
+                x for x in (
+                    self._ewma_for(j, op) for j in range(len(self.backends))
+                ) if x is not None
+            ]
             e = min(known) if known else 1e-3
         return 1.0 / max(e, 1e-9)
 
@@ -803,7 +862,7 @@ class FabricRouter(FabricBackend):
                     counts[order[(self._rr + j) % len(order)]] += 1
                 self._rr = (self._rr + N) % len(order)
                 return [(i, c) for i, c in counts.items() if c > 0]
-            thr = {i: self._throughput(i) for i in live}
+            thr = {i: self._throughput(i, op) for i in live}
             total = sum(thr.values())
             counts = {i: int(N * thr[i] / total) for i in live}
             # JSQ tie-break: spill the remainder (and sub-backend-count
@@ -820,9 +879,14 @@ class FabricRouter(FabricBackend):
     @staticmethod
     def _shard_extra(extra, idx_lo: int, idx_hi: int):
         """Slice the wave's second operand to a shard: arrays shard with the
-        thetas; a sens_fn callable is shared by every shard."""
+        thetas; a sens_fn callable is shared by every shard; the Hessian
+        wave's (senss, vecs) pair shards element-wise."""
         if extra is None or callable(extra):
             return extra
+        if isinstance(extra, tuple):
+            return tuple(
+                np.atleast_2d(np.asarray(e, float))[idx_lo:idx_hi] for e in extra
+            )
         return np.atleast_2d(np.asarray(extra, float))[idx_lo:idx_hi]
 
     def _run_shard(self, op: str, i: int, thetas: np.ndarray, extra, config,
@@ -862,6 +926,10 @@ class FabricRouter(FabricBackend):
                     self._ewma_s[i] = (
                         per_point if e is None else 0.7 * e + 0.3 * per_point
                     )
+                    eo = self._ewma_op_s[i].get(op)
+                    self._ewma_op_s[i][op] = (
+                        per_point if eo is None else 0.7 * eo + 0.3 * per_point
+                    )
                     self.router_stats["points"][i] += n
                     self.router_stats["waves_per_backend"][i] += 1
                 return out, wall, i
@@ -898,19 +966,26 @@ class FabricRouter(FabricBackend):
                     ok = [j for j in alive if self._backoff_until[j] <= now]
                     i = min(
                         ok or alive,
-                        key=lambda j: (self._inflight[j] + n) / self._throughput(j),
+                        key=lambda j: (self._inflight[j] + n) / self._throughput(j, op),
                     )
 
-    def _spec_deadline_s(self, i: int, n: int) -> float | None:
-        """Wall-time allowance for a shard of `n` points on backend `i`
-        before a speculative duplicate launches; None when speculation is
-        disabled or no backend has an EWMA yet (nothing to predict from)."""
+    def _spec_deadline_s(self, i: int, n: int, op: str = "evaluate") -> float | None:
+        """Wall-time allowance for a shard of `n` points of capability `op`
+        on backend `i` before a speculative duplicate launches; None when
+        speculation is disabled or no backend has an estimate for the op
+        yet (nothing to predict from). Consulting the op-specific EWMA
+        matters here: arming an evaluate-derived deadline against a ~3x
+        slower gradient shard fires spurious duplicates."""
         if self.spec_factor is None:
             return None
         with self._lock:
-            e = self._ewma_s[i]
+            e = self._ewma_for(i, op)
             if e is None:
-                known = [x for x in self._ewma_s if x is not None]
+                known = [
+                    x for x in (
+                        self._ewma_for(j, op) for j in range(len(self.backends))
+                    ) if x is not None
+                ]
                 e = min(known) if known else None
         if e is None:
             return None
@@ -935,7 +1010,7 @@ class FabricRouter(FabricBackend):
             idle = [j for j in ok if self._inflight[j] == 0]
             pool = idle or ok
             return min(
-                pool, key=lambda j: (self._inflight[j] + n) / self._throughput(j)
+                pool, key=lambda j: (self._inflight[j] + n) / self._throughput(j, op)
             )
 
     def _dispatch_shards(self, op, thetas, extra, config, plan, bounds):
@@ -956,7 +1031,7 @@ class FabricRouter(FabricBackend):
             sl = thetas[bounds[j]:bounds[j + 1]]
             ex = self._shard_extra(extra, bounds[j], bounds[j + 1])
             cancel = threading.Event()
-            d = self._spec_deadline_s(i, len(sl))
+            d = self._spec_deadline_s(i, len(sl), op)
             shards.append({
                 "thetas": sl, "extra": ex, "cancel": cancel,
                 "racing": {i},
@@ -1087,6 +1162,7 @@ class FabricRouter(FabricBackend):
             members = list(self.backends)
             admin = list(self._admin)
             ewma = list(self._ewma_s)
+            ewma_op = [dict(d) for d in self._ewma_op_s]
             backed = [
                 max(0.0, round(t - time.monotonic(), 3))
                 for t in self._backoff_until
@@ -1102,6 +1178,9 @@ class FabricRouter(FabricBackend):
                 "failures": rs["failures"][i],
                 "capabilities": sorted(b.capabilities().names()),
                 "ewma_point_s": None if ewma[i] is None else round(ewma[i], 5),
+                "ewma_op_point_s": {
+                    op: round(v, 5) for op, v in sorted(ewma_op[i].items())
+                },
                 "backoff_remaining_s": backed[i],
                 **b.stats(),
             }
@@ -1655,15 +1734,44 @@ class EvaluationFabric:
         return self._derivative_wave("apply_jacobian", thetas, vecs, config,
                                      tenant=tenant, namespace=namespace)
 
+    def apply_hessian_batch(self, thetas, senss, vecs,
+                            config: dict | None = None, *,
+                            tenant: str | None = None,
+                            namespace: str | None = None) -> np.ndarray:
+        """Batched HVP wave: [N, n] x [N, m] x [N, n] -> [N, n] with
+        row k = d/de [J(thetas[k] + e vecs[k])^T senss[k]]. Routed only to
+        hessian-capable backends (raises `UnsupportedCapability` when the
+        cluster has none) and cached in the per-capability namespace, keyed
+        on (theta, sens ++ vec, config) — the two operands concatenate into
+        one key row, so hvp(theta, s, v) and hvp(theta, s', v) are distinct
+        entries."""
+        return self._derivative_wave(
+            "apply_hessian", thetas, (senss, vecs), config,
+            tenant=tenant, namespace=namespace,
+        )
+
     def _derivative_wave(self, op: str, thetas, extras, config, *,
                          tenant: str | None = None,
                          namespace: str | None = None) -> np.ndarray:
         thetas = np.atleast_2d(np.asarray(thetas, float))
-        extras = np.atleast_2d(np.asarray(extras, float))
-        if len(extras) != len(thetas):
-            raise ValueError(
-                f"{op}_batch: {len(thetas)} thetas but {len(extras)} operand rows"
-            )
+        if isinstance(extras, tuple):
+            # two-operand wave (apply_hessian): both arrays shard with the
+            # thetas; their concatenation is the cache-key operand row
+            parts = tuple(np.atleast_2d(np.asarray(e, float)) for e in extras)
+            for p in parts:
+                if len(p) != len(thetas):
+                    raise ValueError(
+                        f"{op}_batch: {len(thetas)} thetas but {len(p)} operand rows"
+                    )
+            extras = parts
+            key_extras = np.concatenate(parts, axis=1)
+        else:
+            extras = np.atleast_2d(np.asarray(extras, float))
+            if len(extras) != len(thetas):
+                raise ValueError(
+                    f"{op}_batch: {len(thetas)} thetas but {len(extras)} operand rows"
+                )
+            key_extras = extras
         if not _backend_op_ok(self.backend, op):
             raise UnsupportedCapability(
                 f"fabric backend advertises no {op!r} capability "
@@ -1671,7 +1779,7 @@ class EvaluationFabric:
             )
         N = len(thetas)
         keys = [self._key(t, config, op, e, ns=namespace)
-                for t, e in zip(thetas, extras)]
+                for t, e in zip(thetas, key_extras)]
         rows: list[np.ndarray | None] = [None] * N
         miss_order: list[tuple] = []
         miss_rows: dict[tuple, int] = {}
@@ -1704,9 +1812,13 @@ class EvaluationFabric:
                 miss_idx.append(i)
         outs = None
         if miss_order:
+            miss_extras = (
+                tuple(p[miss_idx] for p in extras)
+                if isinstance(extras, tuple) else extras[miss_idx]
+            )
             t0 = time.monotonic()
             outs = np.atleast_2d(np.asarray(self.backend.dispatch(
-                op, thetas[miss_idx], extras[miss_idx], config
+                op, thetas[miss_idx], miss_extras, config
             ), float))
             wall = time.monotonic() - t0
             with self._lock:

@@ -26,6 +26,13 @@ Endpoints (protocol version 1.0):
                              "config"} -> {"outputs": [[..], ..]}
                              (batched JVP wave)
   POST /ApplyHessian         {"name", "outWrt", "inWrt1", "inWrt2", "input", "sens", "vec", "config"}
+  POST /ApplyHessianBatch    {"name", "inputs": [[..], ..], "senss": [[..], ..],
+                             "vecs": [[..], ..], "config"}
+                             -> {"outputs": [[..], ..]}
+                             (batched HVP wave: row k of "outputs" is
+                             d/de [J_F(inputs[k] + e vecs[k])^T senss[k]] —
+                             one Hessian-apply wave per round-trip, the
+                             second-order analogue of /GradientBatch)
 
 Errors: {"error": {"type": ..., "message": ...}} with HTTP 400.
 """

@@ -4,8 +4,8 @@
 variant is used by tests and by `ThreadedPool`-over-HTTP setups to emulate
 the paper's k8s pods on one host. Beyond protocol 1.0 it serves the batched
 extensions used by the EvaluationFabric backends — `/EvaluateBatch`,
-`/GradientBatch` and `/ApplyJacobianBatch` (N points / VJPs / JVPs per
-round-trip) — and a GET `/Health` liveness probe used by
+`/GradientBatch`, `/ApplyJacobianBatch` and `/ApplyHessianBatch` (N points /
+VJPs / JVPs / HVPs per round-trip) — and a GET `/Health` liveness probe used by
 `repro.core.client.register_servers` when enrolling a cluster of servers
 behind a `FabricRouter`. `/ModelInfo` advertises each model's full
 `Capabilities` descriptor, so clients negotiate the operation surface once
@@ -209,6 +209,31 @@ def _make_handler(models: dict[str, Model]):
                         body["input"], body["sens"], body["vec"], config,
                     )
                     return self._send({"output": list(map(float, out))})
+                if self.path == "/ApplyHessianBatch":
+                    # batched HVP wave (senss AND vecs ride one request);
+                    # like /GradientBatch, a model advertising only the
+                    # per-point form still serves it via the base-class loop
+                    if not caps.op_supported("apply_hessian"):
+                        return self._send(
+                            error_body("UnsupportedFeature", "ApplyHessian"), 400
+                        )
+                    in_sizes = model.get_input_sizes(config)
+                    err = validate_batched_pair_request(
+                        body, in_sizes, "senss",
+                        sum(model.get_output_sizes(config)),
+                    ) or validate_batched_pair_request(
+                        body, in_sizes, "vecs", sum(in_sizes),
+                    )
+                    if err:
+                        return self._send(error_body("InvalidInput", err), 400)
+                    outs = np.atleast_2d(model.apply_hessian_batch(
+                        np.asarray(body["inputs"], float),
+                        np.asarray(body["senss"], float),
+                        np.asarray(body["vecs"], float), config,
+                    ))
+                    return self._send(
+                        {"outputs": [list(map(float, row)) for row in outs]}
+                    )
                 return self._send(error_body("NotFound", self.path), 404)
             except Exception as e:  # noqa: BLE001
                 with stats_lock:

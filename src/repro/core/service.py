@@ -87,6 +87,8 @@ _OP_COST_SCALE = {
     "gradient": 3.0,
     "apply_jacobian": 2.0,
     "value_and_gradient": 3.0,
+    # second-order: a forward tangent sweep plus the reverse sweep over it
+    "apply_hessian": 4.0,
 }
 
 
@@ -530,6 +532,18 @@ class Campaign:
             self, "apply_jacobian", len(thetas),
             lambda: self.service.fabric.apply_jacobian_batch(
                 thetas, vecs, config,
+                tenant=self.tenant, namespace=self._ns(config),
+            ),
+        )
+
+    def apply_hessian_batch(
+        self, thetas, senss, vecs, config: dict | None = None
+    ) -> np.ndarray:
+        thetas = np.atleast_2d(np.asarray(thetas, float))
+        return self.service._run_scheduled(
+            self, "apply_hessian", len(thetas),
+            lambda: self.service.fabric.apply_hessian_batch(
+                thetas, senss, vecs, config,
                 tenant=self.tenant, namespace=self._ns(config),
             ),
         )

@@ -16,7 +16,10 @@ Two dispatch disciplines:
 * `ensemble_mlda` — K chains in LOCKSTEP: every coarse-subchain step and
   every fine acceptance test across all K chains is ONE `evaluate_batch`
   wave (reusing `uq.mcmc.batched_logpost`), so the sampling cost is ~tens
-  of waves instead of thousands of round-trips.
+  of waves instead of thousands of round-trips. With
+  `coarse_sampler="mala"` the coarse subchains become gradient-informed
+  (lockstep preconditioned MALA over fused value-and-gradient waves)
+  while the DA correction above them stays exact.
 
 `ensemble_mlda` additionally accepts `surrogate=` — a
 `uq.surrogate.SurrogateScreen` inserted as a level-(-1) GP screen below
@@ -39,7 +42,12 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.uq.mcmc import ChainResult, PooledCovarianceAdapter, batched_logpost
+from repro.uq.mcmc import (
+    ChainResult,
+    PooledCovarianceAdapter,
+    batched_logpost,
+    batched_value_grad_logpost,
+)
 
 
 @dataclass
@@ -244,7 +252,8 @@ class _EnsembleLevelSampler:
     def __init__(self, logpost_batches, subsampling, prop_cov, rng, K,
                  adaptive: bool = False, adapt_start: int = 50,
                  adapt_interval: int = 1, sd: float | None = None,
-                 surrogate=None, fused_level0=None, fused_key=None):
+                 surrogate=None, fused_level0=None, fused_key=None,
+                 coarse_vg=None, mala_step: float = 0.5):
         self.logposts = list(logpost_batches)
         self.subsampling = list(subsampling)
         self.rng = rng
@@ -257,6 +266,15 @@ class _EnsembleLevelSampler:
         self.tot = np.zeros(self.L)
         self.evals = [0] * self.L
         self.waves = 0
+        # gradient-informed (MALA) coarse subchains: `coarse_vg` is the
+        # batched value-and-gradient view of logposts[0] ([M, d] ->
+        # (lps, glps)); `prop_cov` doubles as the MALA preconditioner C
+        self.coarse_vg = coarse_vg
+        self.mala_step = float(mala_step)
+        if coarse_vg is not None:
+            C = self.chol @ self.chol.T
+            self._mala_C = C
+            self._mala_Cinv = np.linalg.inv(C)
         self.adapter = PooledCovarianceAdapter(self.d, sd=sd) if adaptive else None
         self.adapt_start = int(adapt_start)
         self.adapt_interval = max(1, int(adapt_interval))
@@ -273,6 +291,48 @@ class _EnsembleLevelSampler:
         self.evals[level] += len(xs)
         self.waves += 1
         return np.asarray(self.logposts[level](xs), float).ravel()
+
+    def _vg0(self, xs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """[M, d] -> (lps [M], glps [M, d]) at level 0 in ONE fused wave."""
+        self.evals[0] += len(xs)
+        self.waves += 1
+        lps, gs = self.coarse_vg(xs)
+        return np.asarray(lps, float).ravel(), np.atleast_2d(np.asarray(gs, float))
+
+    def _mala_step0(self, xs, lps, gs):
+        """One lockstep preconditioned-MALA step at level 0 for all chains:
+        x' = x + (eps^2/2) C grad(x) + eps chol(C) xi, accepted with the
+        EXACT MH ratio (both proposal densities), so the coarse subchain
+        still targets logposts[0] exactly and the DA correction above it
+        needs no change. One fused value-and-gradient wave per step — the
+        same wave count the blind RWM subchain pays, but each wave also
+        buys the drift. Returns (xs, lps, gs, accepted[K])."""
+        K = len(xs)
+        eps = self.mala_step
+        C, Cinv = self._mala_C, self._mala_Cinv
+
+        def logq(diff_minus_drift):
+            # log N(x'; x + drift, eps^2 C) up to the cancelling norm const
+            return -0.5 / eps**2 * np.einsum(
+                "ki,ij,kj->k", diff_minus_drift, Cinv, diff_minus_drift
+            )
+
+        drift = 0.5 * eps**2 * gs @ C.T
+        props = xs + drift + eps * self.rng.standard_normal((K, self.d)) @ self.chol.T
+        lp_props, g_props = self._vg0(props)
+        drift_back = 0.5 * eps**2 * g_props @ C.T
+        with np.errstate(invalid="ignore"):
+            log_alpha = (lp_props - lps) + (
+                logq(xs - props - drift_back) - logq(props - xs - drift)
+            )
+        log_alpha = np.where(np.isnan(log_alpha), -np.inf, log_alpha)
+        accept = np.log(self.rng.uniform(size=K)) < log_alpha
+        self.tot[0] += K
+        self.acc[0] += accept.sum()
+        xs = np.where(accept[:, None], props, xs)
+        lps = np.where(accept, lp_props, lps)
+        gs = np.where(accept[:, None], g_props, gs)
+        return xs, lps, gs, accept
 
     def step(self, level: int, xs: np.ndarray, lps: np.ndarray):
         """One lockstep step at `level` for all K chains.
@@ -340,6 +400,20 @@ class _EnsembleLevelSampler:
             note = getattr(self.logposts[0], "note_steps", None)
             if note is not None:
                 note(sub, waves=1)
+        elif level == 1 and self.coarse_vg is not None:
+            # gradient-informed coarse subchain: `sub` lockstep MALA steps,
+            # each ONE fused value-and-gradient wave. All coarse log-
+            # posterior values entering the DA ratio (lp_start, lp_ys) come
+            # from the same `coarse_vg`, so the correction stays exact.
+            ys = xs.copy()
+            lp_ys_coarse, g_ys = self._vg0(ys)
+            lp_start_coarse = lp_ys_coarse.copy()
+            moved = np.zeros(K, bool)
+            for _ in range(sub):
+                ys, lp_ys_coarse, g_ys, acc = self._mala_step0(
+                    ys, lp_ys_coarse, g_ys
+                )
+                moved |= acc
         else:
             ys = xs.copy()
             lp_ys_coarse = self._lp(level - 1, ys)  # cache-served when fabric-backed
@@ -388,6 +462,11 @@ def ensemble_mlda(
     checkpoint_every: int = 0,
     fused_level0=None,
     fused_key=None,
+    coarse_sampler: str = "rwm",
+    coarse_value_grad: Callable | None = None,
+    grad_loglik: Callable | None = None,
+    grad_logprior: Callable | None = None,
+    mala_step: float = 0.5,
 ) -> EnsembleMLDAResult:
     """K MLDA chains advanced in LOCKSTEP (paper §4.3 at fabric scale).
 
@@ -440,13 +519,53 @@ def ensemble_mlda(
     `fused_key=`) rides checkpoints as a key-data manifest so resume stays
     bit-exact. Incompatible with `adaptive=` (the host adaptation path runs
     inside the level-0 loop this replaces) and `surrogate=` (the GP screen
-    taps host-side coarse traffic that no longer exists)."""
+    taps host-side coarse traffic that no longer exists).
+
+    `coarse_sampler="mala"` makes the coarse subchains GRADIENT-INFORMED:
+    each level-0 subchain step is one lockstep preconditioned-MALA step
+    (drift from the coarse posterior gradient; `prop_cov` doubles as the
+    preconditioner C, `mala_step` is eps) costing ONE fused
+    value-and-gradient wave — the same wave count the blind random walk
+    pays. The MALA kernel uses the exact MH ratio with both proposal
+    densities, so the subchain targets the coarse posterior exactly and
+    the DA correction above it is unchanged — DA stays exact; only the
+    QUALITY of the fine-level proposals improves. Pass the batched
+    value-and-gradient coarse logpost as `coarse_value_grad=` ([M, d] ->
+    (lps, glps); see `uq.mcmc.batched_value_grad_logpost` — it MUST
+    evaluate the same posterior as `logpost_batches[0]`), or with
+    `fabric=` pass `grad_loglik=` (and optionally `grad_logprior=`) and it
+    is built automatically. Requires at least two levels and a
+    gradient-capable coarse backend; incompatible with `adaptive=`,
+    `surrogate=` and `fused_level0=` (all act inside the blind level-0
+    path this replaces)."""
     if fused_level0 is not None and (adaptive or surrogate is not None):
         raise ValueError(
             "fused_level0= is incompatible with adaptive= and surrogate=: "
             "both act inside the host level-0 loop that fused subchains "
             "replace (run them on the host path, or freeze/disable them)"
         )
+    if coarse_sampler not in ("rwm", "mala"):
+        raise ValueError(f"coarse_sampler must be 'rwm' or 'mala', got {coarse_sampler!r}")
+    if coarse_sampler == "mala":
+        if adaptive or surrogate is not None or fused_level0 is not None:
+            raise ValueError(
+                "coarse_sampler='mala' is incompatible with adaptive=, "
+                "surrogate= and fused_level0=: all three act inside the "
+                "blind level-0 random-walk path that MALA subchains replace"
+            )
+        if coarse_value_grad is None:
+            if fabric is None or grad_loglik is None:
+                raise ValueError(
+                    "coarse_sampler='mala' needs coarse_value_grad= (a "
+                    "batched [M, d] -> (lps, glps) view of the coarse "
+                    "posterior), or fabric= plus grad_loglik= to build one"
+                )
+            coarse_value_grad = batched_value_grad_logpost(
+                fabric, loglik, grad_loglik, logprior, grad_logprior,
+                (level_configs or [None])[0],
+            )
+    else:
+        coarse_value_grad = None
     if fused_level0 is not None and fused_key is None:
         import jax
 
@@ -459,6 +578,12 @@ def ensemble_mlda(
             fabric, loglik, level_configs, logprior
         )
     assert len(subsampling) == len(logpost_batches) - 1
+    if coarse_value_grad is not None and len(logpost_batches) < 2:
+        raise ValueError(
+            "coarse_sampler='mala' needs at least two levels: the MALA "
+            "kernel drives the coarse SUBCHAINS below a DA acceptance test "
+            "(for single-level gradient-based sampling use uq.mcmc.ensemble_mala)"
+        )
     xs = np.atleast_2d(np.asarray(x0s, float)).copy()
     K, d = xs.shape
     sampler = _EnsembleLevelSampler(
@@ -466,6 +591,7 @@ def ensemble_mlda(
         adaptive=adaptive, adapt_start=adapt_start,
         adapt_interval=adapt_interval, sd=adapt_sd, surrogate=surrogate,
         fused_level0=fused_level0, fused_key=fused_key,
+        coarse_vg=coarse_value_grad, mala_step=mala_step,
     )
     top = len(logpost_batches) - 1
     out = np.empty((K, n_samples, d))

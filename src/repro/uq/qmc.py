@@ -117,7 +117,17 @@ def cub_qmc_sobol(
     Sobol' sequence is extended via `skip` and the per-replication sums are
     reused) — model evaluations are the expensive resource, and recomputing
     the first n points on every doubling would exactly double their count.
+
+    The stopping rule is the CI across replication means, so at least two
+    replications are required: with one, the ddof=1 std is NaN and the
+    driver would silently burn evaluations all the way to `n_max` with
+    `se=NaN` in the result. Rejected up front instead.
     """
+    if replications < 2:
+        raise ValueError(
+            f"replications must be >= 2 (got {replications}): the stopping "
+            "criterion is the standard error ACROSS replication means"
+        )
     eval_fn = _as_batched(f, config)
     n = n_init
     n_done = 0  # points already evaluated per replication
@@ -127,8 +137,22 @@ def cub_qmc_sobol(
         for r in range(replications):
             u = sobol(n - n_done, dim, scramble_seed=seed + r, skip=n_done)
             y = np.atleast_2d(np.asarray(eval_fn(u)))
-            if y.shape[0] != n - n_done:
-                y = y.T
+            # eval_fn contract is [N, dim] -> [N, m]. np.atleast_2d turns an
+            # m-output 1-D return for a single point into [1, m] and a
+            # scalar-output [N] return into [1, N]; only that second,
+            # unambiguous case is transposed. Anything else is a genuine
+            # contract violation — raising beats silently mangling outputs
+            # (the old `if rows != N: y = y.T` heuristic flipped [N, m]
+            # results whenever it happened that m == N).
+            n_new = n - n_done
+            if y.shape[0] != n_new:
+                if y.shape == (1, n_new):
+                    y = y.T
+                else:
+                    raise ValueError(
+                        f"eval_fn returned shape {y.shape} for {n_new} "
+                        f"points; expected [{n_new}, m]"
+                    )
             if sums is None:
                 sums = np.zeros((replications, y.shape[1]))
             sums[r] += y.sum(axis=0)

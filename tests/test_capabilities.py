@@ -272,6 +272,50 @@ def test_tsunami_gradient_duality():
     assert np.all(g[:, 1] > 0)
 
 
+def test_tsunami_hessian_duality():
+    """Lockstep HVP through the SWE adjoint: symmetric (v2.(H v1) ==
+    v1.(H v2) per lane) and consistent with a central difference of the
+    sens-contracted gradient — checked on a coarsened hierarchy so the
+    second-order scan sweep stays cheap."""
+    from repro.apps.tsunami import TsunamiModel
+
+    class SmallTsunami(TsunamiModel):
+        N_CELLS = {0: 128, 1: 256}
+
+    m = SmallTsunami()
+    assert m.capabilities().apply_hessian_batch
+    rng = np.random.default_rng(0)
+    thetas = np.array([[90.0, 2.5], [60.0, 1.2]])
+    v1 = rng.normal(size=(2, 2))
+    v2 = rng.normal(size=(2, 2))
+    senss = rng.normal(size=(2, 4))
+    h1 = m.apply_hessian_batch(thetas, senss, v1)
+    h2 = m.apply_hessian_batch(thetas, senss, v2)
+    assert np.all(np.isfinite(h1)) and np.all(np.isfinite(h2))
+    # the sens-contracted Hessian is symmetric: bilinear-form duality
+    np.testing.assert_allclose(
+        np.einsum("ki,ki->k", h1, v2), np.einsum("ki,ki->k", h2, v1),
+        rtol=1e-4,
+    )
+    # central difference of g(theta) = J(theta)^T sens along v1 (eps large
+    # enough to clear float32 noise in the solver)
+    d = 2
+
+    def sens_grad(tb):
+        jv = m.apply_jacobian_batch(
+            np.repeat(tb, d, axis=0), np.tile(np.eye(d), (len(tb), 1))
+        ).reshape(len(tb), d, 4)
+        return np.einsum("km,kdm->kd", senss, jv)
+
+    eps = 1e-2
+    fd = (sens_grad(thetas + eps * v1) - sens_grad(thetas - eps * v1)) / (2 * eps)
+    np.testing.assert_allclose(h1, fd, rtol=0.1, atol=2e-5)
+    # per-point surface delegates to the same batched kernel
+    pp = m.apply_hessian(0, 0, 0, [thetas[0].tolist()], senss[0].tolist(),
+                         v1[0].tolist())
+    np.testing.assert_allclose(np.asarray(pp), h1[0], rtol=1e-5)
+
+
 # -- HTTP negotiation ---------------------------------------------------------
 
 
@@ -338,6 +382,49 @@ def test_client_negotiates_subset_against_eval_only_server(eval_only_server):
     np.testing.assert_allclose(g, [[2e3, 4e3]], rtol=1e-3)
     # one failed /GradientBatch probe + one FD evaluate wave
     assert hm.round_trips == 2
+
+
+def test_apply_hessian_batch_one_round_trip(grad_server):
+    """The whole HVP wave rides ONE /ApplyHessianBatch POST. Model
+    [sum th^2, th0 - th1]: Hessian of output 0 is 2I, of output 1 is 0, so
+    the contracted HVP is 2 * sens[0] * vec."""
+    hm = HTTPModel(grad_server)
+    assert hm.capabilities().apply_hessian_batch
+    hm.round_trips = 0
+    X = np.array([[1.0, 2.0], [3.0, -1.0], [0.5, 0.25]])
+    S = np.array([[1.0, 0.0], [2.0, 5.0], [-1.0, 3.0]])
+    V = np.array([[1.0, 1.0], [2.0, 0.0], [-1.0, 3.0]])
+    h = hm.apply_hessian_batch(X, S, V)
+    np.testing.assert_allclose(h, 2.0 * S[:, :1] * V, rtol=1e-6)
+    assert hm.round_trips == 1
+
+
+def test_apply_hessian_batch_degrades_to_per_point(grad_server):
+    """Against a server whose route predates /ApplyHessianBatch the client
+    falls back to per-point /ApplyHessian — explicitly, mirroring the
+    gradient ladder (there is NO finite-difference rung for Hessians)."""
+    hm = HTTPModel(grad_server)
+    hm._hvp_batch_supported = False
+    hm.round_trips = 0
+    X = np.array([[1.0, 2.0], [3.0, -1.0]])
+    S = np.array([[1.0, 0.0], [2.0, 5.0]])
+    V = np.array([[1.0, 1.0], [2.0, 0.0]])
+    h = hm.apply_hessian_batch(X, S, V)
+    np.testing.assert_allclose(h, 2.0 * S[:, :1] * V, rtol=1e-6)
+    assert hm.round_trips == len(X) + 1  # per-point route + /InputSizes
+
+
+def test_apply_hessian_refused_on_evaluate_only_server(eval_only_server):
+    """No apply_hessian capability advertised: the client refuses with the
+    typed error BEFORE any wire traffic (no probe, no FD fallback)."""
+    hm = HTTPModel(eval_only_server)
+    assert not hm.capabilities().op_supported("apply_hessian")
+    hm.round_trips = 0
+    with pytest.raises(UnsupportedCapability, match="apply_hessian"):
+        hm.apply_hessian_batch(
+            np.ones((2, 2)), np.ones((2, 1)), np.ones((2, 2))
+        )
+    assert hm.round_trips == 0
 
 
 def test_health_probe_reports_capabilities(grad_server):
@@ -486,6 +573,59 @@ def test_router_refuses_to_steal_gradient_wave_onto_evaluate_only():
     with EvaluationFabric(router3, cache_size=0) as fab:
         with pytest.raises(UnsupportedCapability):
             fab.gradient_batch(np.ones((2, 2)), np.ones((2, 1)))
+
+
+def test_hessian_wave_cache_namespace(jax_model):
+    """HVP waves get their own cache namespace keyed on the FULL operand
+    triple (theta, sens, vec) — never served from the evaluate or gradient
+    namespaces, and distinct probe vectors are distinct entries."""
+    with EvaluationFabric(ModelBackend(jax_model), cache_size=64) as fab:
+        X = np.array([[1.0, 2.0]])
+        S = np.array([[1.0, 0.0]])
+        V = np.array([[1.0, 1.0]])
+        h = fab.apply_hessian_batch(X, S, V)
+        np.testing.assert_allclose(h, 2.0 * S[:, :1] * V, rtol=1e-6)
+        t = fab.telemetry()
+        assert t["per_capability"]["apply_hessian"]["waves"] == 1
+        fab.apply_hessian_batch(X, S, V)  # identical triple: cache hit
+        t = fab.telemetry()
+        assert t["per_capability"]["apply_hessian"]["waves"] == 1
+        assert t["per_capability"]["apply_hessian"]["cache_hits"] == 1
+        fab.apply_hessian_batch(X, S, 2.0 * V)  # new vec: real dispatch
+        fab.apply_hessian_batch(X, 2.0 * S, V)  # new sens: real dispatch
+        t = fab.telemetry()
+        assert t["per_capability"]["apply_hessian"]["waves"] == 3
+        # same theta under evaluate: ITS namespace, not the HVP entries
+        fab.evaluate_batch(X)
+        assert fab.telemetry()["per_capability"]["evaluate"]["waves"] == 1
+
+
+def test_router_routes_hessian_waves_only_to_capable_backends(jax_model):
+    def np_forward(X):
+        X = np.atleast_2d(X)
+        return np.stack([(X**2).sum(1), X[:, 0] - X[:, 1]], axis=1)
+
+    eval_only = CallableBackend(np_forward)
+    router = FabricRouter([ModelBackend(jax_model), eval_only])
+    with EvaluationFabric(router, cache_size=0) as fab:
+        rng = np.random.default_rng(0)
+        for _ in range(4):  # warm both EWMAs on evaluate traffic
+            fab.evaluate_batch(rng.standard_normal((8, 2)))
+        X = rng.standard_normal((6, 2))
+        S = rng.standard_normal((6, 2))
+        V = rng.standard_normal((6, 2))
+        h = fab.apply_hessian_batch(X, S, V)
+        np.testing.assert_allclose(h, 2.0 * S[:, :1] * V, rtol=1e-5)
+        stats = router.stats()
+        assert stats["per_backend"][1]["points"] > 0  # evaluate split
+        assert stats["op_waves"]["apply_hessian"] == 1
+        assert "apply_hessian" in router.capabilities().names()
+    # no hessian-capable backend at all: refused before any dispatch
+    with EvaluationFabric(FabricRouter([eval_only]), cache_size=0) as fab:
+        with pytest.raises(UnsupportedCapability):
+            fab.apply_hessian_batch(
+                np.ones((2, 2)), np.ones((2, 2)), np.ones((2, 2))
+            )
 
 
 # -- gradient-based lockstep samplers ----------------------------------------
@@ -644,6 +784,72 @@ def test_adaptive_ensemble_rwm_learns_pooled_covariance():
     ratio = res.proposal_cov[0, 0] / res.proposal_cov[1, 1]
     assert 2.5 < ratio < 6.5  # anisotropy (true 4.0) learned through pooling
     assert 0.1 < res.accept_rate < 0.6
+
+
+def _coarse_vg(X):
+    """Batched value+grad of the biased coarse posterior N(-0.5, 2I)."""
+    X = np.atleast_2d(np.asarray(X, float))
+    return -0.25 * ((X + 0.5) ** 2).sum(1), -0.5 * (X + 0.5)
+
+
+def test_ensemble_mlda_mala_coarse_targets_fine_posterior():
+    """Gradient-informed coarse subchains leave the DA correction exact:
+    with a BIASED coarse level (N(-0.5, 2I)) under MALA, the chain still
+    targets the fine posterior N(1, I)."""
+    from _stat_harness import assert_moments
+
+    rng = np.random.default_rng(9)
+    res = ensemble_mlda(
+        [lambda X: _coarse_vg(X)[0],
+         lambda X: -0.5 * ((np.atleast_2d(X) - 1.0) ** 2).sum(1)],
+        rng.standard_normal((12, 2)) + 1.0, 250, [4], 0.7 * np.eye(2), rng,
+        coarse_sampler="mala", coarse_value_grad=_coarse_vg, mala_step=0.8,
+    )
+    assert_moments(res.samples, 1.0, 1.0, z=6.0, min_ess=80,
+                   label="mala-coarse mlda")
+    assert res.accept_rates[0] > 0.3  # the MALA subchain actually moves
+    assert np.all(np.isfinite(res.samples))
+
+
+def test_ensemble_mlda_mala_builds_value_grad_from_fabric():
+    """With `fabric=` + `grad_loglik=` the coarse value-and-gradient view
+    is assembled automatically and every MALA subchain step is ONE fused
+    wave in the fabric telemetry."""
+    m = JAXModel(lambda th: th * 1.0, 2, 2)  # identity: J = I
+    fab = EvaluationFabric(ModelBackend(m), cache_size=0)
+    try:
+        rng = np.random.default_rng(10)
+        res = ensemble_mlda(
+            None, rng.standard_normal((8, 2)), 120, [3], np.eye(2), rng,
+            fabric=fab,
+            loglik=lambda y: -0.5 * float(np.sum(np.square(y))),
+            grad_loglik=lambda y: -y,
+            level_configs=[{}, {}],
+            coarse_sampler="mala", mala_step=0.8,
+        )
+        t = fab.telemetry()
+    finally:
+        fab.shutdown()
+    assert t["per_capability"]["value_and_gradient"]["waves"] > 0
+    assert res.accept_rates[1] > 0.9  # identical levels: DA nearly always accepts
+    assert np.all(np.isfinite(res.samples))
+
+
+def test_ensemble_mlda_mala_validation():
+    rng = np.random.default_rng(0)
+    x0s = np.zeros((4, 2))
+    two = [lambda X: _coarse_vg(X)[0], lambda X: _coarse_vg(X)[0]]
+    with pytest.raises(ValueError, match="coarse_sampler"):
+        ensemble_mlda(two, x0s, 5, [2], np.eye(2), rng, coarse_sampler="hmc")
+    with pytest.raises(ValueError, match="incompatible"):
+        ensemble_mlda(two, x0s, 5, [2], np.eye(2), rng,
+                      coarse_sampler="mala", coarse_value_grad=_coarse_vg,
+                      adaptive=True)
+    with pytest.raises(ValueError, match="coarse_value_grad"):
+        ensemble_mlda(two, x0s, 5, [2], np.eye(2), rng, coarse_sampler="mala")
+    with pytest.raises(ValueError, match="two levels"):
+        ensemble_mlda([two[0]], x0s, 5, [], np.eye(2), rng,
+                      coarse_sampler="mala", coarse_value_grad=_coarse_vg)
 
 
 def test_ensemble_mlda_adaptive_proposal():

@@ -125,6 +125,133 @@ def test_single_point_waves_prefer_shortest_queue():
         fab.shutdown()
 
 
+# -- per-capability EWMA (headline regression) --------------------------------
+
+
+class _TimedOpModel(Model):
+    """Quadratic with separately tunable per-point costs for evaluate and
+    gradient waves — the shape of a real fleet where one backend's adjoint
+    solver is far slower than its forward solver."""
+
+    def __init__(self, eval_cost_s: float, grad_cost_s: float):
+        super().__init__("forward")
+        self.eval_cost_s = eval_cost_s
+        self.grad_cost_s = grad_cost_s
+
+    def get_input_sizes(self, c=None):
+        return [2]
+
+    def get_output_sizes(self, c=None):
+        return [1]
+
+    def capabilities(self, config=None):
+        from repro.core.interface import Capabilities
+
+        return Capabilities(
+            evaluate=True, evaluate_batch=True, gradient=True, gradient_batch=True
+        )
+
+    def evaluate_batch(self, thetas, config=None):
+        thetas = np.atleast_2d(thetas)
+        time.sleep(self.eval_cost_s * len(thetas))
+        return (thetas**2).sum(1, keepdims=True)
+
+    def gradient_batch(self, thetas, senss, config=None):
+        thetas = np.atleast_2d(thetas)
+        time.sleep(self.grad_cost_s * len(thetas))
+        return 2 * thetas * np.atleast_2d(senss)
+
+
+def _mixed_storm(router, n_rounds=6, n_points=32, seed=0):
+    """Alternate evaluate and gradient waves; return the imbalance EWMA."""
+    from repro.core.fabric import EvaluationFabric
+
+    rng = np.random.default_rng(seed)
+    fab = EvaluationFabric(router, cache_size=0)
+    try:
+        for _ in range(2):  # warm BOTH per-op estimates
+            fab.evaluate_batch(rng.standard_normal((n_points, 2)))
+            fab.gradient_batch(
+                rng.standard_normal((n_points, 2)), np.ones((n_points, 1))
+            )
+        router.reset_stats()
+        for _ in range(n_rounds):
+            X = rng.standard_normal((n_points, 2))
+            np.testing.assert_allclose(
+                fab.evaluate_batch(X).ravel(), (X**2).sum(1), rtol=1e-6
+            )
+            fab.gradient_batch(X, np.ones((n_points, 1)))
+        return router.stats()["imbalance_ewma"]
+    finally:
+        fab.shutdown()
+
+
+def test_per_capability_ewma_holds_imbalance_under_mixed_traffic():
+    """The headline fix: backend B's forward solver matches A's, but its
+    adjoint is ~12x slower. A single blended service-time estimate lets the
+    expensive gradient waves poison the evaluate split (and vice versa);
+    per-(backend, capability) EWMAs must keep the mixed-storm imbalance at
+    the ISSUE's <= 1.3 bar, where the blended baseline measurably exceeds
+    it."""
+    from repro.core.fabric import ModelBackend
+
+    def mk_router():
+        return FabricRouter([
+            ModelBackend(_TimedOpModel(0.0006, 0.0006)),
+            ModelBackend(_TimedOpModel(0.0006, 0.0072)),
+        ])
+
+    imb_per_op = _mixed_storm(mk_router(), seed=1)
+    blended = mk_router()
+    # ablate the fix: route every op on the blended cross-op estimate
+    blended._ewma_for = lambda i, op: blended._ewma_s[i]
+    imb_blended = _mixed_storm(blended, seed=1)
+    assert imb_per_op is not None and imb_blended is not None
+    assert imb_per_op <= 1.3, (imb_per_op, imb_blended)
+    assert imb_blended > imb_per_op, (imb_per_op, imb_blended)
+    assert imb_blended > 1.3, (imb_per_op, imb_blended)
+
+
+def test_per_capability_ewma_checkpoint_roundtrip():
+    """state_dict carries the per-op estimates; load_state restores them,
+    and a pre-fix checkpoint (no per-op key) still loads as a blended
+    seed."""
+    from repro.core.fabric import ModelBackend
+
+    router = FabricRouter([
+        ModelBackend(_TimedOpModel(0.001, 0.001)),
+        ModelBackend(_TimedOpModel(0.001, 0.004)),
+    ])
+    fab = EvaluationFabric(router, cache_size=0)
+    try:
+        X = np.random.default_rng(0).standard_normal((16, 2))
+        fab.evaluate_batch(X)
+        fab.gradient_batch(X, np.ones((16, 1)))
+    finally:
+        fab.shutdown()
+    doc = router.state_dict()
+    assert "ewma_op_point_s" in doc
+    assert "gradient" in doc["ewma_op_point_s"][1]
+    fresh = FabricRouter([
+        ModelBackend(_TimedOpModel(0.001, 0.001)),
+        ModelBackend(_TimedOpModel(0.001, 0.004)),
+    ])
+    fresh.load_state(doc)
+    for i in (0, 1):
+        for op in ("evaluate", "gradient"):
+            assert fresh._ewma_for(i, op) == pytest.approx(
+                router._ewma_for(i, op)
+            )
+    # legacy checkpoint: blended estimate only -> used as the op seed
+    legacy = FabricRouter([
+        ModelBackend(_TimedOpModel(0.001, 0.001)),
+        ModelBackend(_TimedOpModel(0.001, 0.004)),
+    ])
+    legacy.load_state({"ewma_point_s": [0.002, 0.003], "admin": ["live", "live"]})
+    assert legacy._ewma_for(0, "gradient") == pytest.approx(0.002)
+    assert legacy._ewma_for(1, "evaluate") == pytest.approx(0.003)
+
+
 # -- failover / backoff -------------------------------------------------------
 
 

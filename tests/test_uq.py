@@ -17,6 +17,7 @@ from repro.uq.mcmc import effective_sample_size, gelman_rubin, random_walk_metro
 from repro.uq.mlda import delayed_acceptance, mlda
 from repro.uq.monte_carlo import monte_carlo
 from repro.uq.qmc import cub_qmc_sobol, sobol
+from repro.uq.sensitivity import sobol_indices
 from repro.uq import sparse_grid as sg
 
 DISTS = [
@@ -117,6 +118,85 @@ def test_cubature_converges():
     res = cub_qmc_sobol(lambda u: np.sin(2 * np.pi * u).sum(1, keepdims=True) + 1.0, 4, abs_tol=5e-4)
     assert res.converged
     assert abs(res.mean[0] - 1.0) < 5e-3
+
+
+def test_cubature_rejects_single_replication():
+    """Satellite regression: replications=1 used to burn the whole n_max
+    budget and return se=NaN; it must be refused up front instead."""
+    with pytest.raises(ValueError, match="replications"):
+        cub_qmc_sobol(lambda u: u.sum(1, keepdims=True), 2, replications=1)
+
+
+def test_cubature_shape_handling_is_explicit():
+    """Scalar [N] returns and single-output [1, N] rows are accepted; any
+    other row-count mismatch is a typed error, not a silent transpose."""
+    res = cub_qmc_sobol(lambda u: u.sum(1), 2, abs_tol=1e-2)  # [N] ok
+    assert abs(res.mean[0] - 1.0) < 0.05
+    with pytest.raises(ValueError, match="expected"):
+        cub_qmc_sobol(lambda u: np.ones((7, 2)), 2)
+
+
+# -- Sobol' sensitivity indices -----------------------------------------------
+
+
+def test_sobol_indices_match_analytic_ishigami():
+    """First/total-order indices on the Ishigami function against the
+    closed-form references, with the pick-freeze design riding the QMC
+    doubling driver (n_evals == (dim + 2) x cubature points)."""
+    a, b = 7.0, 0.1
+
+    def f(U):
+        X = np.pi * (2.0 * np.asarray(U) - 1.0)
+        y = (np.sin(X[:, 0]) + a * np.sin(X[:, 1]) ** 2
+             + b * X[:, 2] ** 4 * np.sin(X[:, 0]))
+        return y[:, None]
+
+    res = sobol_indices(f, 3, abs_tol=5e-3, n_max=2**13, seed=11)
+    V = a**2 / 8 + b * np.pi**4 / 5 + b**2 * np.pi**8 / 18 + 0.5
+    V1 = 0.5 * (1 + b * np.pi**4 / 5) ** 2
+    V2 = a**2 / 8
+    T3 = 8 * b**2 * np.pi**8 / 225
+    np.testing.assert_allclose(res.variance, V, rtol=0.02)
+    np.testing.assert_allclose(res.first, [V1 / V, V2 / V, 0.0], atol=0.02)
+    np.testing.assert_allclose(
+        res.total, [(V1 + T3) / V, V2 / V, T3 / V], atol=0.02
+    )
+    assert res.n_evals == 5 * res.cubature.n_evals  # A, B and AB_i per point
+
+
+def test_sobol_indices_one_wave_per_doubling_through_fabric():
+    """Through an EvaluationFabric the (dim + 2) pick-freeze blocks of each
+    doubling land as ONE evaluate wave, never dim + 2 dispatches."""
+    from repro.core.fabric import CallableBackend, EvaluationFabric
+
+    calls = {"waves": 0}
+
+    def g(U):
+        calls["waves"] += 1
+        U = np.atleast_2d(U)
+        return (U[:, :1] + 2.0 * U[:, 1:2] ** 2)
+
+    with EvaluationFabric(CallableBackend(g), cache_size=0) as fab:
+        res = sobol_indices(
+            f=fab, dim=2, abs_tol=5e-3, n_init=64, n_max=2**10,
+            replications=4, seed=3,
+        )
+    # x1 linear (V1 = 1/12), x2 quadratic (V2 = 16/45), no interaction
+    V1, V2 = 1.0 / 12.0, 16.0 / 45.0
+    np.testing.assert_allclose(
+        res.first, [V1 / (V1 + V2), V2 / (V1 + V2)], atol=0.03
+    )
+    np.testing.assert_allclose(res.first, res.total, atol=0.03)
+    # one wave per (replication x doubling) — NEVER x(dim + 2) on top
+    assert calls["waves"] == 4 * len(res.cubature.history)
+
+
+def test_sobol_indices_validates_dimension_and_variance():
+    with pytest.raises(ValueError, match="2\\*dim"):
+        sobol_indices(lambda U: U[:, :1], 99)
+    with pytest.raises(ValueError, match="variance"):
+        sobol_indices(lambda U: np.ones((len(U), 1)), 2, n_max=256,
+                      replications=4)
 
 
 # -- sparse grids -------------------------------------------------------------
